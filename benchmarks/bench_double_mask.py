@@ -1,0 +1,44 @@
+"""Paper Fig. 5(e): BN compatibility — {no BN, BN+single mask,
+BN+double mask} across sparsity."""
+import json
+
+import jax
+
+from benchmarks.common import make_cluster_data, train_mlp
+
+GAMMAS = (0.3, 0.5, 0.7, 0.875)
+
+
+def run(steps=300, seed=0):
+    key = jax.random.PRNGKey(seed)
+    data = make_cluster_data(jax.random.fold_in(key, 9))
+    out = {"gammas": list(GAMMAS), "no_bn": [], "bn_single": [],
+           "bn_double": []}
+    for g in GAMMAS:
+        a, _ = train_mlp(key, data, strategy="drs", gamma=g, steps=steps,
+                         use_bn=False)
+        out["no_bn"].append(round(a, 4))
+        a, _ = train_mlp(key, data, strategy="drs", gamma=g, steps=steps,
+                         use_bn=True, mask_mode="single")
+        out["bn_single"].append(round(a, 4))
+        a, _ = train_mlp(key, data, strategy="drs", gamma=g, steps=steps,
+                         use_bn=True, mask_mode="double")
+        out["bn_double"].append(round(a, 4))
+    return out
+
+
+def main():
+    out = run()
+    print("== Fig 5(e): double-mask BN compatibility (test accuracy) ==")
+    print(f"{'gamma':>8} | {'no_bn':>8} | {'bn+single':>9} | {'bn+double':>9}")
+    for i, g in enumerate(out["gammas"]):
+        print(f"{g:8.3f} | {out['no_bn'][i]:8.4f} | "
+              f"{out['bn_single'][i]:9.4f} | {out['bn_double'][i]:9.4f}")
+    json.dump(out, open("bench_results/double_mask.json", "w"), indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    import os
+    os.makedirs("bench_results", exist_ok=True)
+    main()

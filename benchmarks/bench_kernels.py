@@ -1,0 +1,68 @@
+"""Kernel-level benchmark: Pallas DSG FFN vs oracle — parity + the
+block-skip accounting (fraction of (token-tile x group-block) MXU tiles
+skipped vs gamma, i.e. the kernel-realized compute reduction)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import drs
+from repro.kernels import ops, ref
+
+GAMMAS = (0.3, 0.5, 0.7, 0.9)
+
+
+def run(m=256, d=256, f=1024, block=64, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (m, d))
+    wg = jax.random.normal(ks[1], (d, f)) / np.sqrt(d)
+    wu = jax.random.normal(ks[2], (d, f)) / np.sqrt(d)
+    wd = jax.random.normal(ks[3], (f, d)) / np.sqrt(f)
+    r = jax.random.normal(ks[4], (128, d)) / np.sqrt(128)
+    fw = r @ wg
+    out = {"gammas": list(GAMMAS), "tile_skip_pertoken": [],
+           "tile_skip_shared": [], "max_err": []}
+    for g in GAMMAS:
+        cfg = drs.DRSConfig(gamma=g, block=block)
+        fx = ops.drs_project(x, r)
+        scores = ops.drs_scores(fx, fw, block=block)
+        mask, _ = drs.select_mask(scores, f, cfg)
+        y = ops.dsg_ffn_fwd(x, wg, wu, wd, mask, block=block, bm=64, bf=64)
+        yref = ref.dsg_ffn_ref(x, wg, wu, wd, mask, block)
+        out["max_err"].append(float(jnp.abs(y - yref).max()))
+        mt, ft = m // 64, f // 64
+
+        def skip_frac(msk):
+            tile = msk.reshape(mt, 64, ft, 64 // block).max(axis=(1, 3))
+            return round(1.0 - float(tile.mean()), 4)
+
+        # (a) uncorrelated per-token masks: tile = OR over 64 tokens ->
+        #     little to skip (the paper's Fig 8(a) GEMM-hardness, measured)
+        out["tile_skip_pertoken"].append(skip_frac(mask))
+        # (b) batch-shared selection (gather_shared / converged masks):
+        #     every tile agrees -> skip fraction == gamma
+        shared = jnp.broadcast_to(mask[:1], mask.shape)
+        out["tile_skip_shared"].append(skip_frac(shared))
+    return out
+
+
+def main():
+    out = run()
+    print("== Pallas DSG-FFN kernel: block-skip realization ==")
+    print(f"{'gamma':>7} | {'skip(per-token)':>16} | {'skip(shared)':>13} "
+          f"| {'max |err|':>10}")
+    for g, a, b, e in zip(out["gammas"], out["tile_skip_pertoken"],
+                          out["tile_skip_shared"], out["max_err"]):
+        print(f"{g:7.2f} | {a:16.1%} | {b:13.1%} | {e:10.2e}")
+    print("(per-token masks on random inputs barely skip whole tiles — the"
+          " paper's Fig 8(a) GEMM finding, quantified; shared/converged"
+          " selection skips exactly gamma of the MXU tiles)")
+    json.dump(out, open("bench_results/kernels.json", "w"), indent=1)
+
+
+if __name__ == "__main__":
+    import os
+    os.makedirs("bench_results", exist_ok=True)
+    main()

@@ -1,0 +1,39 @@
+"""Fig. 5(a) analogue on a transformer LM: training-loss vs DSG sparsity
+on the internlm2 smoke config (synthetic stream)."""
+import json
+
+from repro import configs
+from repro.launch.train import train
+
+GAMMAS = (0.0, 0.3, 0.5, 0.75)
+
+
+def run(steps=60, batch=8, seq=64):
+    out = {"gammas": list(GAMMAS), "final_loss": []}
+    for g in GAMMAS:
+        cfg = configs.get_smoke_config("internlm2-1.8b")
+        if g == 0.0:
+            cfg = cfg.replace(dsg=cfg.dsg._replace(enabled=False))
+        else:
+            cfg = cfg.replace(dsg=cfg.dsg._replace(gamma=g))
+        _, hist, _ = train(cfg, steps=steps, global_batch=batch, seq_len=seq)
+        losses = [h["loss"] for h in hist]
+        out["final_loss"].append(round(sum(losses[-10:]) / 10, 4))
+    return out
+
+
+def main():
+    out = run()
+    print("== Fig 5(a) analogue: LM loss vs DSG sparsity ==")
+    for g, l in zip(out["gammas"], out["final_loss"]):
+        print(f"  gamma={g:5.2f}  final_loss={l:.4f}")
+    d0 = out["final_loss"][0]
+    print(f"(claim shape: moderate sparsity ~ dense ({d0:.3f}); "
+          "degradation grows with gamma)")
+    json.dump(out, open("bench_results/lm_sparsity.json", "w"), indent=1)
+
+
+if __name__ == "__main__":
+    import os
+    os.makedirs("bench_results", exist_ok=True)
+    main()

@@ -1,0 +1,126 @@
+"""Shared harness for the paper-reproduction benchmarks: a small MLP
+classifier (the paper's MLP/FASHION analogue — no datasets ship offline,
+so a deterministic Gaussian-cluster task stands in) and a small LM, each
+with pluggable DSG selection strategy (drs | oracle | random | none)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import double_mask, drs, masks, projection
+
+
+def make_cluster_data(key, n_classes=16, dim=64, n_per_class=64,
+                      noise=0.9, n_test_per_class=32):
+    kc, ktr, kte = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (n_classes, dim)) * 2.0
+    def draw(k, n):
+        ks = jax.random.split(k, n_classes)
+        xs = jnp.concatenate([
+            centers[i] + noise * jax.random.normal(ks[i], (n, dim))
+            for i in range(n_classes)])
+        ys = jnp.repeat(jnp.arange(n_classes), n)
+        return xs, ys
+    xtr, ytr = draw(ktr, n_per_class)
+    xte, yte = draw(kte, n_test_per_class)
+    return (xtr, ytr), (xte, yte)
+
+
+def init_mlp(key, dim=64, hidden=512, n_classes=16, depth=2):
+    ks = jax.random.split(key, depth + 1)
+    sizes = [dim] + [hidden] * depth + [n_classes]
+    return {
+        "w": [jax.random.normal(ks[i], (sizes[i], sizes[i + 1]))
+              / np.sqrt(sizes[i]) for i in range(depth + 1)],
+        "bn_scale": [jnp.ones(hidden) for _ in range(depth)],
+        "bn_bias": [jnp.zeros(hidden) for _ in range(depth)],
+    }
+
+
+def mlp_forward(params, x, *, strategy="none", gamma=0.5, block=32,
+                dsg_state=None, rng=None, use_bn=False, mask_mode="double"):
+    """2-hidden-layer ReLU MLP with DSG selection on each hidden layer.
+
+    strategy: none | drs | oracle | random (paper Fig. 5(c)).
+    use_bn + mask_mode: the Fig. 5(e) double-mask study ('single'|'double').
+    """
+    h = x
+    depth = len(params["w"]) - 1
+    cfg = drs.DRSConfig(gamma=gamma, block=block, threshold_mode="topk")
+    for i in range(depth):
+        w = params["w"][i]
+        pre = h @ w
+        f = w.shape[1]
+        if strategy == "none" or gamma == 0.0:
+            gmask = None
+        elif strategy == "oracle":
+            gmask = drs.oracle_mask(pre, f, cfg)
+        elif strategy == "random":
+            rng, sub = jax.random.split(rng)
+            gmask = drs.random_mask(sub, pre.shape[:-1], f, cfg)
+        else:  # drs
+            st = dsg_state[i]
+            fx = projection.project_rows(st["r"], h)
+            gmask, _ = drs.drs_mask(fx, st["fw"], cfg)
+        act = jax.nn.relu(pre)
+        if gmask is not None:
+            gmask = masks.freeze(gmask)
+            act = masks.apply_expanded(act, gmask, block)
+        if use_bn:
+            def bn(z, i=i):
+                return double_mask.batch_norm_train(
+                    z, params["bn_scale"][i], params["bn_bias"][i])
+            if gmask is None:
+                act = bn(act)
+            elif mask_mode == "double":
+                act = double_mask.double_mask(bn, act, gmask, block)
+            else:
+                act = double_mask.single_mask(bn, act, gmask, block)
+        h = act
+    return h @ params["w"][-1], rng
+
+
+def make_dsg_state(key, params, eps=0.5):
+    state = []
+    for i, w in enumerate(params["w"][:-1]):
+        d, f = w.shape
+        k = projection.jll_dim(d, f, eps)
+        r = projection.make_projection(jax.random.fold_in(key, i), k, d)
+        state.append({"r": r, "fw": projection.project(r, w)})
+    return state
+
+
+def train_mlp(key, data, *, strategy="none", gamma=0.5, block=32,
+              steps=300, lr=0.05, use_bn=False, mask_mode="double",
+              eps=0.5, refresh_every=50):
+    (xtr, ytr), (xte, yte) = data
+    params = init_mlp(jax.random.fold_in(key, 0))
+    dsg_state = make_dsg_state(jax.random.fold_in(key, 1), params, eps) \
+        if strategy == "drs" else None
+    rng = jax.random.fold_in(key, 2)
+
+    def loss_fn(p, st, rng):
+        logits, _ = mlp_forward(p, xtr, strategy=strategy, gamma=gamma,
+                                block=block, dsg_state=st, rng=rng,
+                                use_bn=use_bn, mask_mode=mask_mode)
+        onehot = jax.nn.one_hot(ytr, logits.shape[-1])
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    for step in range(steps):
+        rng, sub = jax.random.split(rng)
+        loss, g = grad_fn(params, dsg_state, sub)
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+        if strategy == "drs" and (step + 1) % refresh_every == 0:
+            for i, w in enumerate(params["w"][:-1]):
+                dsg_state[i]["fw"] = projection.project(dsg_state[i]["r"], w)
+
+    logits, _ = mlp_forward(params, xte, strategy=strategy, gamma=gamma,
+                            block=block, dsg_state=dsg_state, rng=rng,
+                            use_bn=use_bn, mask_mode=mask_mode)
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == yte))
+    return acc, float(loss)

@@ -1,0 +1,30 @@
+"""Re-run the HLO analyzer over saved hlo.gz artifacts and refresh the
+'analysis' block of each results JSON (no recompilation needed)."""
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.launch import hlo_analysis
+
+
+def main(results="results"):
+    for jf in sorted(glob.glob(os.path.join(results, "*.json"))):
+        rec = json.load(open(jf))
+        if rec.get("status") != "ok":
+            continue
+        tag = rec.get("tag") or ("dsg" if rec.get("dsg", True) else "dense")
+        hf = os.path.join(results, "hlo",
+                          f"{rec['arch']}__{rec['shape']}__{rec['mesh']}__"
+                          f"{tag}.hlo.gz")
+        if not os.path.exists(hf):
+            continue
+        with gzip.open(hf, "rt") as f:
+            rec["analysis"] = hlo_analysis.analyze(f.read())
+        json.dump(rec, open(jf, "w"), indent=1)
+        print("reanalyzed", os.path.basename(jf))
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,206 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the dry-run's compiled artifacts.
+
+Hardware model (TPU v5e target):
+    peak bf16 compute   197 TFLOP/s per chip
+    HBM bandwidth       819 GB/s per chip
+    ICI link bandwidth  ~50 GB/s per link
+
+Terms (seconds, per device = per step since SPMD is bulk-synchronous):
+    compute    = HLO_FLOPs_dev / 197e12
+    memory     = HLO_bytes_dev / 819e9
+    collective = wire_bytes_dev / 50e9
+      wire convention: all-gather / reduce-scatter / all-to-all /
+      collective-permute send ~ their payload; all-reduce = 2x payload
+      (ring AR = RS + AG).  Payloads come from the scan-aware HLO analyzer
+      (launch/hlo_analysis.py), so collectives inside the layer loop are
+      counted x trip_count.
+
+MODEL_FLOPS (the "useful work" yardstick):
+    train:  6 * N_active * tokens        (fwd 2x + bwd 4x)
+    prefill: 2 * N_active * tokens
+    decode: 2 * N_active * batch * 1 token (+ KV-cache reads counted in
+            the memory term, not FLOPs — noted in EXPERIMENTS.md)
+ratio = MODEL_FLOPS / (HLO_FLOPs_dev * devices): fraction of compiled
+compute that is "useful"; < 1/3 for training means heavy remat/waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+
+import jax
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+AR_FACTOR = 2.0   # ring all-reduce = reduce-scatter + all-gather
+
+
+def active_params(arch: str) -> tuple:
+    """(total_params, active_params) from the abstract param tree."""
+    from repro import configs
+    from repro.models import api
+
+    cfg = configs.get_config(arch)
+    key = jax.random.PRNGKey(0)
+    tree = jax.eval_shape(lambda: api.init_model(key, cfg))
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    total = active = 0
+    for path, leaf in flat:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        keys = "/".join(str(getattr(p, "key", p)) for p in path)
+        if "moe" in keys and "shared" not in keys and "router" not in keys:
+            # routed experts: only top_k of E are active per token
+            active += n * cfg.moe_topk / cfg.moe_experts
+        else:
+            active += n
+    return int(total), int(active)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    from repro.configs.base import shape_by_name
+    _, n_active = active_params(arch)
+    sh = shape_by_name(shape_name)
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n_active * tokens
+    if sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * sh.global_batch      # decode: 1 new token
+
+
+def wire_bytes(analysis: dict, bf16_model: bool = True) -> float:
+    """XLA:CPU float-normalization promotes bf16 compute (and therefore
+    collective payloads) to f32 before SPMD partitioning; on the TPU
+    target those collectives run at bf16.  For bf16 models we count f32
+    payloads at half size (the logits/optimizer truly-f32 collectives are
+    <2% of traffic — the residual error is noted in EXPERIMENTS.md)."""
+    c = analysis["collectives"]
+
+    def adj(kind):
+        b = c[kind]["bytes"]
+        f32 = c[kind].get("f32_bytes", 0.0)
+        return b - 0.5 * f32 if bf16_model else b
+
+    return (AR_FACTOR * adj("all-reduce")
+            + adj("all-gather")
+            + adj("reduce-scatter")
+            + adj("all-to-all")
+            + adj("collective-permute"))
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: str
+    devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_dev: float
+    useful_ratio: float
+    temp_gb: float
+    tag: str = "dsg"
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """No-overlap upper bound on the step time."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / bound step time (the score)."""
+        useful_s = self.model_flops / self.devices / PEAK_FLOPS
+        return useful_s / max(self.step_s, 1e-12)
+
+
+_MF_CACHE: dict = {}
+
+
+def load_cell(path: str):
+    rec = json.load(open(path))
+    if rec.get("status") != "ok":
+        return rec
+    a = rec["analysis"]
+    key = (rec["arch"], rec["shape"])
+    if key not in _MF_CACHE:
+        _MF_CACHE[key] = model_flops(*key)
+    mf = _MF_CACHE[key]
+    return Cell(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        devices=rec["devices"],
+        compute_s=a["flops"] / PEAK_FLOPS,
+        memory_s=a["bytes"] / HBM_BW,
+        collective_s=wire_bytes(a) / LINK_BW,
+        model_flops=mf,
+        hlo_flops_dev=a["flops"],
+        useful_ratio=mf / max(a["flops"] * rec["devices"], 1.0),
+        temp_gb=rec.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9,
+        tag=rec.get("tag") or ("dsg" if rec.get("dsg", True) else "dense"),
+    )
+
+
+def load_all(results_dir: str = "results"):
+    cells, skips = [], []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        c = load_cell(f)
+        if isinstance(c, Cell):
+            cells.append(c)
+        else:
+            skips.append(c)
+    return cells, skips
+
+
+def table(cells, mesh="single_pod") -> str:
+    rows = [c for c in cells if c.mesh == mesh and c.tag == "dsg"]
+    rows.sort(key=lambda c: (c.arch, c.shape))
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | step bound s | useful ratio | roofline frac | temp GB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for c in rows:
+        out.append(
+            f"| {c.arch} | {c.shape} | {c.compute_s:.4f} | {c.memory_s:.4f} "
+            f"| {c.collective_s:.4f} | **{c.dominant}** | {c.step_s:.4f} "
+            f"| {c.useful_ratio:.3f} | {c.roofline_fraction:.3f} "
+            f"| {c.temp_gb:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--mesh", default="single_pod")
+    args = ap.parse_args()
+    cells, skips = load_all(args.results)
+    print(table(cells, args.mesh))
+    print(f"\ncells={len(cells)} skips={len(skips)}")
+    # the three hillclimb candidates
+    rows = [c for c in cells if c.mesh == args.mesh]
+    if rows:
+        worst = min(rows, key=lambda c: c.roofline_fraction)
+        coll = max(rows, key=lambda c: c.collective_s / max(c.step_s, 1e-12))
+        print(f"\nworst roofline fraction: {worst.arch} x {worst.shape} "
+              f"({worst.roofline_fraction:.3f})")
+        print(f"most collective-bound:   {coll.arch} x {coll.shape} "
+              f"({coll.collective_s:.4f}s of {coll.step_s:.4f}s)")
+
+
+if __name__ == "__main__":
+    main()

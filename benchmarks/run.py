@@ -1,0 +1,76 @@
+"""Benchmark orchestrator: one section per paper table/figure, plus the
+roofline report from the dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --fast     # skip training benches
+"""
+import argparse
+import os
+import sys
+import time
+
+
+def _section(title):
+    print("\n" + "=" * 72)
+    print(title)
+    print("=" * 72, flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the training-based benchmarks")
+    args = ap.parse_args()
+    os.makedirs("bench_results", exist_ok=True)
+    t0 = time.time()
+
+    _section("Roofline (deliverable g) — baseline dry-run artifacts")
+    from benchmarks import roofline
+    if os.path.isdir("results"):
+        cells, skips = roofline.load_all("results")
+        print(roofline.table(cells, "single_pod"))
+        print(f"[baseline] cells={len(cells)} skips={len(skips)}")
+    if os.path.isdir("results_opt"):
+        _section("Roofline — OPTIMIZED defaults (post-hillclimb)")
+        cells, _ = roofline.load_all("results_opt")
+        print(roofline.table(cells, "single_pod"))
+
+    _section("Table 1 / Fig 5(d) / Fig 10(c): epsilon & DRS cost")
+    from benchmarks import bench_epsilon
+    bench_epsilon.main()
+
+    _section("Fig 6: memory footprint (stash compression model)")
+    from benchmarks import bench_memory
+    bench_memory.main()
+
+    _section("Fig 7: operation reduction")
+    from benchmarks import bench_ops
+    bench_ops.main()
+
+    _section("Pallas kernel: block-skip realization + parity")
+    from benchmarks import bench_kernels
+    bench_kernels.main()
+
+    if not args.fast:
+        _section("Fig 5(c): selection strategy (DRS vs oracle vs random)")
+        from benchmarks import bench_selection
+        bench_selection.main()
+
+        _section("Fig 5(e): double-mask BN compatibility")
+        from benchmarks import bench_double_mask
+        bench_double_mask.main()
+
+        _section("Fig 11: mask convergence")
+        from benchmarks import bench_mask_convergence
+        bench_mask_convergence.main()
+
+        _section("Fig 5(a) analogue: LM loss vs sparsity")
+        from benchmarks import bench_lm_sparsity
+        bench_lm_sparsity.main()
+
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s; "
+          "JSON artifacts in bench_results/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — Dynamic Sparse Graph (DSG, ICLR 2019) as a pod-scale JAX framework."""
+__version__ = "1.0.0"

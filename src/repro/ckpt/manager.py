@@ -1,0 +1,143 @@
+"""Sharded checkpoint manager: atomic, manifest-verified, async-capable.
+
+Layout:
+    <dir>/step_<N>/arrays.npz      flattened pytree leaves
+    <dir>/step_<N>/manifest.json   tree structure + shapes + dtypes + meta
+    <dir>/LATEST                   text file with the newest complete step
+
+Write protocol (crash-safe): write into step_<N>.tmp/, fsync, rename to
+step_<N>/, then update LATEST.  A half-written checkpoint can never be
+picked up by restore() because the rename is atomic and LATEST only moves
+after the rename.  `keep` bounds retention.  save_async overlaps the host
+write with the next training step (device->host transfer happens before
+the thread starts so the arrays are immutable snapshots).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+
+SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ---- write ----
+    def save(self, step: int, tree: Any, meta: Optional[dict] = None):
+        self.wait()
+        flat = _flatten(tree)
+        self._write(step, flat, meta or {})
+
+    def save_async(self, step: int, tree: Any, meta: Optional[dict] = None):
+        self.wait()
+        flat = _flatten(tree)   # snapshot on host before returning
+        self._thread = threading.Thread(
+            target=self._write, args=(step, flat, meta or {}), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat: dict, meta: dict):
+        final = os.path.join(self.dir, f"step_{step}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "meta": meta,
+            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in flat.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        with open(os.path.join(self.dir, "LATEST"), "w") as f:
+            f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ---- read ----
+    def steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name,
+                                               "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        path = os.path.join(self.dir, "LATEST")
+        if os.path.exists(path):
+            with open(path) as f:
+                s = int(f.read().strip())
+            if s in self.steps():
+                return s
+        steps = self.steps()     # LATEST missing/stale: trust the manifests
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None):
+        """Restore into the structure of `template` (shapes verified).
+        Returns (tree, step, meta) or (None, None, None) if empty."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None, None
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            data = {k: z[k] for k in z.files}
+        paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, leaf in paths:
+            key = SEP.join(str(getattr(q, "key", getattr(q, "idx", q)))
+                           for q in p)
+            if key not in data:
+                raise KeyError(f"checkpoint missing array {key!r}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                    f"template {leaf.shape}")
+            leaves.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        return tree, step, manifest.get("meta", {})

@@ -1,0 +1,12 @@
+"""repro.core — the DSG (Dynamic Sparse Graph) primary contribution.
+
+Public surface:
+  projection  — sparse random projection (Achlioptas ternary, JLL sizing)
+  drs         — dimension-reduction search (virtual activations, top-k masks)
+  masks       — mask algebra (group masks, sparse dataflow)
+  double_mask — norm-compatible double-mask selection
+  dsg_linear  — DSG FFN layers (mask / gather_shared modes) + DSGConfig
+  stash       — compressed activation-stash accounting
+"""
+from repro.core.dsg_linear import DSGConfig  # noqa: F401
+from repro.core.drs import DRSConfig  # noqa: F401

@@ -1,0 +1,95 @@
+"""Paper-native CONV path: DSG on convolutions via im2col (paper §2.2).
+
+The paper converts each CONV layer to VMM form: every output position is
+a sliding-window row X_i (n_CRS = C*R*S) against the filter matrix
+(n_CRS, n_K); DRS estimates the n_K output activations per window and
+masks non-critical filters per position.  This module reproduces that
+formulation exactly (used by the paper-fidelity tests and the CNN-era
+benchmarks); the transformer FFN path in dsg_linear.py is the
+production-scale analogue (DESIGN.md §2).
+
+Includes the double-mask BN hookup: CONV -> ReLU(masked) -> BN -> same
+mask (paper Fig 2(c), with the paper's CONV-ReLU-BN reordering §2.2).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import double_mask as dm
+from repro.core import drs, masks, projection
+from repro.core.dsg_linear import DSGConfig
+
+
+def im2col(x: jax.Array, rs: Tuple[int, int], padding: str = "SAME"):
+    """x (B, H, W, C) -> patches (B, H', W', C*R*S)."""
+    r, s = rs
+    pad = ((r // 2, (r - 1) // 2), (s // 2, (s - 1) // 2)) \
+        if padding == "SAME" else ((0, 0), (0, 0))
+    xp = jnp.pad(x, ((0, 0), pad[0], pad[1], (0, 0)))
+    b, hp, wp, c = xp.shape
+    ho = hp - r + 1
+    wo = wp - s + 1
+    idx_h = jnp.arange(ho)[:, None] + jnp.arange(r)[None, :]
+    idx_w = jnp.arange(wo)[:, None] + jnp.arange(s)[None, :]
+    patches = xp[:, idx_h][:, :, :, idx_w]        # (B, H', R, W', S, C)
+    patches = jnp.moveaxis(patches, 2, 3)         # (B, H', W', R, S, C)
+    return patches.reshape(b, ho, wo, r * s * c)
+
+
+def init_conv_dsg(key: jax.Array, c_in: int, rs: Tuple[int, int],
+                  n_k: int, cfg: DSGConfig):
+    """Filter matrix (CRS, K) + DSG state (R projection over CRS, f(W))."""
+    kw, kr = jax.random.split(key)
+    crs = rs[0] * rs[1] * c_in
+    w = jax.random.normal(kw, (crs, n_k)) / jnp.sqrt(crs)
+    k = projection.jll_dim(crs, n_k, cfg.eps)
+    r = projection.make_projection(kr, k, crs)
+    return {"w": w, "r": r, "fw": projection.project(r, w)}
+
+
+def conv2d_dsg(p: dict, x: jax.Array, rs: Tuple[int, int], cfg: DSGConfig,
+               bn_scale: Optional[jax.Array] = None,
+               bn_bias: Optional[jax.Array] = None,
+               mask_mode: str = "double"):
+    """DSG convolution: im2col -> DRS per sliding window -> masked VMM
+    -> ReLU -> (optional BN with double mask).
+
+    x (B, H, W, C) -> (y (B, H', W', K), group_mask)."""
+    patches = im2col(x, rs)                               # (B,H',W',CRS)
+    b, ho, wo, crs = patches.shape
+    rows = patches.reshape(-1, crs)
+    if cfg.enabled:
+        fx = projection.project_rows(p["r"], rows)
+        gmask, _ = drs.drs_mask(fx, p["fw"], cfg.drs_cfg())
+        gmask = masks.freeze(gmask)
+    else:
+        gmask = None
+    pre = rows @ p["w"]                                   # (rows, K)
+    act = jax.nn.relu(pre)
+    if gmask is not None:
+        act = masks.apply_expanded(act, gmask, cfg.block)
+    if bn_scale is not None:
+        def bn(z):
+            return dm.batch_norm_train(z, bn_scale, bn_bias)
+        if gmask is None:
+            act = bn(act)
+        elif mask_mode == "double":
+            act = dm.double_mask(bn, act, gmask, cfg.block)
+        else:
+            act = dm.single_mask(bn, act, gmask, cfg.block)
+    y = act.reshape(b, ho, wo, -1)
+    return y, gmask
+
+
+def conv2d_ref(w: jax.Array, x: jax.Array, rs: Tuple[int, int]):
+    """lax.conv oracle for the unmasked path (tests)."""
+    r, s = rs
+    c_in = x.shape[-1]
+    n_k = w.shape[-1]
+    kernel = w.reshape(r, s, c_in, n_k)
+    return jax.lax.conv_general_dilated(
+        x, kernel, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))

@@ -1,0 +1,54 @@
+"""Double-mask selection (paper §2.3) — norm compatibility.
+
+Normalization layers fuse information across elements and turn exact zeros
+into small non-zeros, destroying the sparsity DRS created.  The paper's fix:
+apply the SAME selection mask again after the norm.  Correct because the
+norm is monotone per-channel (scale+shift does not reorder activations), so
+the masked-out neurons are still the removable ones.
+
+The paper's case is BatchNorm ('CONV/FC -> ReLU -> BN' after their
+reordering).  We generalize to the norms that appear in our stacks:
+  * BatchNorm  — paper-native CNN/MLP configs (train-mode batch stats).
+  * LayerNorm / RMSNorm — post-norm transformer variants: mean/RMS are
+    computed across the channel dim, so zeros densify exactly as with BN.
+Pre-norm transformer blocks do not need a double mask (the norm precedes the
+masked linear); the single post-selection mask already leaves the residual
+stream sparse.  See DESIGN.md §2.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks
+
+
+def batch_norm_train(x: jax.Array, scale: jax.Array, bias: jax.Array,
+                     axis: int = 0, eps: float = 1e-5) -> jax.Array:
+    """Training-mode BN over the batch axis (per-feature stats)."""
+    mean = jnp.mean(x, axis=axis, keepdims=True)
+    var = jnp.var(x, axis=axis, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def double_mask(norm_fn: Callable[[jax.Array], jax.Array],
+                x: jax.Array, group_mask: jax.Array, block: int) -> jax.Array:
+    """y = Mask( norm( Mask(x) ) ) — the paper's Fig. 2(c) dataflow.
+
+    `group_mask` is the (..., G) selection mask produced by DRS for this
+    layer; it is applied at group granularity both before and after the
+    norm, restoring a fully sparse dataflow."""
+    m = masks.freeze(group_mask)
+    pre = masks.apply_expanded(x, m, block)
+    post = norm_fn(pre)
+    return masks.apply_expanded(post, m, block)
+
+
+def single_mask(norm_fn: Callable[[jax.Array], jax.Array],
+                x: jax.Array, group_mask: jax.Array, block: int) -> jax.Array:
+    """Ablation baseline (paper Fig. 5(e) middle case): mask only before the
+    norm — the norm's output is dense again."""
+    m = masks.freeze(group_mask)
+    return norm_fn(masks.apply_expanded(x, m, block))

@@ -1,0 +1,142 @@
+"""Dimension-reduction search (DRS) — the paper's graph-selection mechanism.
+
+Given projected activations f(X) (..., k) and projected weights f(W) (k, N),
+compute *virtual* pre-activations  v = f(X) @ f(W)  in the low-dim space,
+score output neurons, and emit a binary selection mask keeping the top
+(1 - gamma) fraction (gamma = paper's sparsity knob).
+
+TPU adaptation (DESIGN.md §2): selection granularity is a *neuron group* of
+`block` consecutive output neurons (default 128 = MXU lane width) instead of
+single neurons.  The group score is sum(relu(v)) over the group — an estimate
+of the group's post-ReLU/SiLU L1 mass; a sum of JLL-preserved inner products
+is itself preserved, so the paper's guarantee carries over to groups.
+
+Threshold modes (paper Appendix B + DESIGN.md §10.5):
+  * "topk"   — exact per-row top-k over groups (jax.lax.top_k).
+  * "shared" — paper-faithful inter-sample threshold sharing: the top-k
+               threshold is computed on the FIRST row of the batch and
+               shared by all rows.
+  * "ema"    — beyond-paper: threshold is an exponential moving average
+               carried across steps (no per-batch search at all, and no
+               cross-`data` collective in the sharded setting).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class DRSConfig(NamedTuple):
+    gamma: float = 0.5          # target sparsity (fraction of groups dropped)
+    block: int = 128            # neuron-group width (TPU adaptation)
+    threshold_mode: str = "topk"   # "topk" | "shared" | "ema"
+    ema_decay: float = 0.95     # for threshold_mode == "ema"
+    score: str = "relu_sum"     # "relu_sum" | "abs_sum" | "signed_sum"
+
+
+def num_groups(n_out: int, block: int) -> int:
+    if n_out % block != 0:
+        raise ValueError(f"n_out={n_out} not divisible by block={block}")
+    return n_out // block
+
+
+def keep_groups(n_out: int, cfg: DRSConfig) -> int:
+    """Number of groups kept: ceil((1-gamma) * G), at least 1."""
+    g = num_groups(n_out, cfg.block)
+    return max(1, int((1.0 - cfg.gamma) * g + 0.999999))
+
+
+def group_scores(virtual: jax.Array, cfg: DRSConfig) -> jax.Array:
+    """(..., N) virtual pre-activations -> (..., G) group scores."""
+    g = virtual.shape[-1] // cfg.block
+    v = virtual.reshape(virtual.shape[:-1] + (g, cfg.block))
+    if cfg.score == "relu_sum":
+        return jnp.sum(jax.nn.relu(v), axis=-1)
+    if cfg.score == "abs_sum":
+        return jnp.sum(jnp.abs(v), axis=-1)
+    if cfg.score == "signed_sum":
+        return jnp.sum(v, axis=-1)
+    if cfg.score == "max":
+        # argmax-retrieval proxy (serving logit DSG): the block's top
+        # estimated activation, not its mass
+        return jnp.max(v, axis=-1)
+    raise ValueError(f"unknown score {cfg.score}")
+
+
+def _topk_threshold(scores: jax.Array, k: int) -> jax.Array:
+    """Per-row k-th largest score: (..., G) -> (..., 1)."""
+    top = jax.lax.top_k(scores, k)[0]
+    return top[..., k - 1:k]
+
+
+def select_mask(scores: jax.Array, n_out: int, cfg: DRSConfig,
+                ema_threshold: Optional[jax.Array] = None):
+    """Group scores (..., G) -> (mask (..., G), new_ema or None).
+
+    mask is float32 {0,1}.  Exactly-k per row only in "topk" mode; the
+    shared/ema modes are thresholded (variable k per row) as in the paper.
+    """
+    k = keep_groups(n_out, cfg)
+    g = scores.shape[-1]
+    if k >= g:
+        return jnp.ones_like(scores), ema_threshold
+    if cfg.threshold_mode == "topk":
+        thr = _topk_threshold(scores, k)
+        mask = (scores >= thr).astype(jnp.float32)
+        return mask, ema_threshold
+    if cfg.threshold_mode == "shared":
+        # Paper Appendix B / Fig. 9: threshold from the first sample, shared
+        # across the rest of the mini-batch.  Rows are (..., G); "first
+        # sample" = index 0 of the leading batch axis.
+        flat = scores.reshape((-1, g))
+        thr = _topk_threshold(flat[0:1], k)          # (1, 1)
+        mask = (scores >= thr.reshape((1,) * (scores.ndim - 1) + (1,)))
+        return mask.astype(jnp.float32), ema_threshold
+    if cfg.threshold_mode == "ema":
+        # Threshold carried across steps; current batch's exact top-k
+        # threshold (mean over rows) feeds the EMA for the *next* step.
+        thr_now = jnp.mean(_topk_threshold(scores, k))
+        if ema_threshold is None:
+            ema_threshold = thr_now
+        thr = ema_threshold
+        mask = (scores >= thr).astype(jnp.float32)
+        new_ema = cfg.ema_decay * ema_threshold + (1 - cfg.ema_decay) * thr_now
+        return mask, new_ema
+    raise ValueError(f"unknown threshold_mode {cfg.threshold_mode}")
+
+
+def drs_mask(fx: jax.Array, fw: jax.Array, cfg: DRSConfig,
+             ema_threshold: Optional[jax.Array] = None):
+    """Full DRS: f(X) (..., k) x f(W) (k, N) -> group mask (..., G).
+
+    This is the cheap low-dimensional VMM the paper substitutes for the full
+    one — cost O(T*k*N) instead of O(T*d*N), k << d.
+    """
+    virtual = jnp.einsum("...k,kn->...n", fx, fw)
+    scores = group_scores(virtual, cfg)
+    return select_mask(scores, fw.shape[-1], cfg, ema_threshold)
+
+
+def expand_mask(mask: jax.Array, block: int) -> jax.Array:
+    """Group mask (..., G) -> neuron mask (..., G*block)."""
+    return jnp.repeat(mask, block, axis=-1)
+
+
+def oracle_mask(pre_act: jax.Array, n_out: int, cfg: DRSConfig) -> jax.Array:
+    """Paper Fig. 5(c) 'oracle' baseline: select on the TRUE pre-activations
+    (requires the full VMM first — what DRS avoids)."""
+    scores = group_scores(pre_act, cfg)
+    mask, _ = select_mask(scores, n_out, cfg._replace(threshold_mode="topk"))
+    return mask
+
+
+def random_mask(key: jax.Array, batch_shape: tuple, n_out: int,
+                cfg: DRSConfig) -> jax.Array:
+    """Paper Fig. 5(c) 'random' baseline: keep k random groups per row."""
+    g = num_groups(n_out, cfg.block)
+    k = keep_groups(n_out, cfg)
+    scores = jax.random.uniform(key, batch_shape + (g,))
+    thr = _topk_threshold(scores, k)
+    return (scores >= thr).astype(jnp.float32)

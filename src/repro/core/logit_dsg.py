@@ -1,0 +1,87 @@
+"""Serving-time DSG on the LM head (beyond-paper, DESIGN.md §7.6).
+
+At decode time the vocab projection (d -> V, V up to 202k here) dominates
+per-token FLOPs for small batches.  Greedy/top-p sampling only needs the
+high logits, so the paper's machinery applies directly: DRS estimates the
+logit blocks from f(x) @ f(W_head), the top (1-gamma) blocks are gathered,
+and exact logits are computed only for the survivors.  Masked-out vocab
+blocks are reported as -inf (they cannot win sampling among survivors).
+
+Training keeps the full head (the softmax normalizer needs all logits).
+Exactness caveat (documented): greedy decoding is exact whenever the true
+argmax block is selected — the test measures the JLL-governed hit rate.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import drs, projection
+from repro.core.dsg_linear import DSGConfig
+
+NEG = -1e30
+
+
+def init_logit_dsg(key: jax.Array, w_head: jax.Array,
+                   cfg: DSGConfig) -> dict:
+    """w_head (d, V) -> {'r': (k, d), 'fw': (k, V)}."""
+    d, v = w_head.shape
+    k = projection.jll_dim(d, v, cfg.eps)
+    r = projection.make_projection(key, k, d, dtype=w_head.dtype)
+    return {"r": r, "fw": projection.project(r, w_head)}
+
+
+def dsg_logits(x: jax.Array, w_head: jax.Array, state: dict,
+               cfg: DSGConfig, per_request: bool = True
+               ) -> Tuple[jax.Array, jax.Array]:
+    """x (B, d) -> (logits (B, V) with -inf on skipped blocks, block mask).
+
+    per_request=True selects blocks independently per row (the default:
+    a decode batch serves unrelated requests whose argmax blocks are
+    disjoint — a batch-shared selection caps the greedy hit rate at
+    roughly (1-gamma) for diverse batches, measured in
+    tests/test_serving.py).  Block scores use the max estimated logit in
+    the block (argmax-retrieval proxy)."""
+    b, d = x.shape
+    v = w_head.shape[1]
+    blk = cfg.block
+    g = v // blk
+    keep = max(1, int((1.0 - cfg.gamma) * g + 0.999999))
+
+    fx = projection.project_rows(state["r"], x)
+    virtual = jnp.einsum("bk,kv->bv", fx, state["fw"])
+    scores = drs.group_scores(virtual, cfg.drs_cfg()._replace(
+        score="max"))                                      # (B, G)
+    w3 = w_head.reshape(d, g, blk).transpose(1, 0, 2)      # (G, d, blk)
+
+    if per_request:
+        _, idx = jax.lax.top_k(scores, keep)               # (B, keep)
+        idx = jnp.sort(idx, axis=-1)
+        w_sel = w3[idx]                                    # (B, keep, d, blk)
+        part = jnp.einsum("bd,bkdc->bkc", x, w_sel)
+        logits = jnp.full((b, g, blk), NEG, part.dtype)
+        logits = logits.at[jnp.arange(b)[:, None], idx].set(part)
+        mask = jnp.zeros((b, g), jnp.float32).at[
+            jnp.arange(b)[:, None], idx].set(1.0)
+        return logits.reshape(b, v), mask
+
+    shared = scores.max(axis=0)                            # batch-shared
+    _, idx = jax.lax.top_k(shared, keep)
+    idx = jnp.sort(idx)
+    part = jnp.einsum("bd,kdc->bkc", x, w3[idx])
+    logits = jnp.full((b, g, blk), NEG, part.dtype)
+    logits = logits.at[:, idx].set(part)
+    mask = jnp.broadcast_to(
+        jnp.zeros((g,), jnp.float32).at[idx].set(1.0), (b, g))
+    return logits.reshape(b, v), mask
+
+
+def flops_saving(v: int, d: int, cfg: DSGConfig) -> float:
+    """Fraction of head FLOPs avoided (minus the DRS search cost)."""
+    k = projection.jll_dim(d, v, cfg.eps)
+    full = d * v
+    search = k * d + k * v
+    kept = (1.0 - cfg.gamma) * full
+    return 1.0 - (search + kept) / full

@@ -1,0 +1,40 @@
+"""Mask algebra for DSG sparse dataflow.
+
+Masks are {0,1} float tensors at neuron-group granularity (..., G) or
+expanded (..., N).  They are *constants* w.r.t. autodiff (paper Algorithm 1
+treats Mask_k as data): we stop_gradient at creation so backward error
+tensors are sparsified exactly where the forward was — `G_X <= Mask(...)`
+falls out of differentiating the mask-multiply.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def freeze(mask: jax.Array) -> jax.Array:
+    return jax.lax.stop_gradient(mask)
+
+
+def apply_expanded(x: jax.Array, group_mask: jax.Array, block: int) -> jax.Array:
+    """x (..., G*block) * expand(group_mask (..., G)) without materializing
+    the expanded mask separately (reshape-multiply keeps it fused)."""
+    g = group_mask.shape[-1]
+    xs = x.reshape(x.shape[:-1] + (g, block))
+    y = xs * group_mask[..., None].astype(x.dtype)
+    return y.reshape(x.shape)
+
+
+def density(mask: jax.Array) -> jax.Array:
+    """Fraction of ones — used by tests and the memory accounting."""
+    return jnp.mean(mask)
+
+
+def mask_overhead_bytes(shape: tuple, block: int) -> int:
+    """Bitmask storage cost for the stash (paper: <2% of memory).  One bit
+    per neuron group per row, byte-rounded."""
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    groups = shape[-1] // block
+    return rows * ((groups + 7) // 8)

@@ -1,0 +1,81 @@
+"""Sparse random projection (Achlioptas 2001) — the DSG dimension reducer.
+
+The paper projects both activations X and weight columns W_j with one shared
+ternary matrix R in {-sqrt(s), 0, +sqrt(s)}^{k x d}, s=3 (67% zeros), and
+estimates inner products in the k-dimensional space:
+
+    f(Z) = (1/sqrt(k)) R Z,   <f(X), f(W_j)> ~= <X, W_j>   (JLL, paper Eq. 4)
+
+On TPU a ternary matmul costs the same MXU time as a dense one, so the win
+is k << d, not multiplier elision; we keep the ternary distribution for its
+variance-1 guarantee (E[R_pq]=0, Var[R_pq]=1) and so the same machinery can
+ternarize gradients for the collective-compression path (optim/compress.py).
+
+k is derived from the paper's epsilon via the JLL bound k = c * ln(N) / eps^2
+(we use c=4, N = number of rows+cols involved), then rounded up to the TPU
+lane width (128) so the projected operand tiles cleanly into the MXU.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128  # TPU lane width; projected dim k is rounded up to this.
+
+
+def jll_dim(d: int, n_points: int, eps: float, c: float = 4.0,
+            lane: int = LANE) -> int:
+    """JLL-derived projection dim for approximation error eps.
+
+    k = c * ln(N) / eps^2, clamped to [lane, d] and rounded up to `lane`
+    (MXU alignment).  eps is the paper's epsilon knob (Fig. 5(d)).
+    """
+    if eps <= 0:
+        raise ValueError(f"eps must be positive, got {eps}")
+    k = int(math.ceil(c * math.log(max(n_points, 2)) / (eps * eps)))
+    k = max(lane, min(d, k))
+    # round up to lane multiple, but never beyond d (projection cannot expand)
+    k = min(d, ((k + lane - 1) // lane) * lane)
+    return k
+
+
+def make_projection(key: jax.Array, k: int, d: int, s: int = 3,
+                    dtype=jnp.float32) -> jax.Array:
+    """Ternary Achlioptas projection matrix R, shape (k, d).
+
+    P(+sqrt(s)) = P(-sqrt(s)) = 1/(2s), P(0) = 1 - 1/s.  With s=3 this is
+    the paper's 67%-sparse ternary matrix.  Scaled by 1/sqrt(k) here so
+    f(Z) = R @ Z directly (no separate normalizer at use sites).
+    """
+    ku, ks = jax.random.split(key)
+    u = jax.random.uniform(ku, (k, d))
+    sign = jnp.where(jax.random.uniform(ks, (k, d)) < 0.5, 1.0, -1.0)
+    r = jnp.where(u < 1.0 / s, sign * math.sqrt(s), 0.0)
+    return (r / math.sqrt(k)).astype(dtype)
+
+
+def project(r: jax.Array, z: jax.Array) -> jax.Array:
+    """f(Z) = R @ Z for Z of shape (d, ...) — projects the leading dim.
+
+    For activations laid out (..., d) use `project_rows`.
+    """
+    return jnp.tensordot(r, z, axes=((1,), (0,)))
+
+
+def project_rows(r: jax.Array, x: jax.Array) -> jax.Array:
+    """f(X) over the trailing feature dim: (..., d) -> (..., k)."""
+    return jnp.tensordot(x, r, axes=((-1,), (1,)))
+
+
+@partial(jax.jit, static_argnames=("refresh_every",))
+def maybe_refresh_fw(step: jax.Array, r: jax.Array, w: jax.Array,
+                     fw: jax.Array, refresh_every: int = 50) -> jax.Array:
+    """Paper Sec. 3.1: the projected weights f(W) are refreshed only every
+    `refresh_every` (=50) steps to amortize projection cost.  Between
+    refreshes the stale f(W) is used for the search; the paper shows this
+    does not hurt selection quality (weights drift slowly)."""
+    do = (step % refresh_every) == 0
+    return jax.lax.cond(do, lambda: project(r, w).astype(fw.dtype), lambda: fw)

@@ -1,0 +1,68 @@
+"""Activation-stash accounting — the paper's representational-cost model.
+
+The paper compresses stashed activations with zero-value compression (ZVC)
+between forward and backward.  On TPU the user-level analogue is (a) the
+gather_shared path, whose stash is physically (1-gamma) of the dense one,
+and (b) compressed accounting for the mask path, where a real deployment
+stores `h * mask` in a compacted buffer (value stream + bitmask) via a
+custom DMA/kernel.  These helpers compute the analytic sizes used by
+benchmarks/bench_memory.py (reproducing Fig. 6's methodology) and by tests.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Tuple
+
+import numpy as np
+
+from repro.core.masks import mask_overhead_bytes
+
+
+def dense_stash_bytes(shape: Tuple[int, ...], dtype_bytes: int = 2) -> int:
+    return int(np.prod(shape)) * dtype_bytes
+
+
+def dsg_stash_bytes(shape: Tuple[int, ...], gamma: float, block: int,
+                    dtype_bytes: int = 2) -> int:
+    """Compressed stash: kept values + group bitmask.  `shape` is the dense
+    activation shape with the neuron dim last."""
+    dense = dense_stash_bytes(shape, dtype_bytes)
+    kept = int(dense * (1.0 - gamma))
+    return kept + mask_overhead_bytes(shape, block)
+
+
+def training_footprint(layer_shapes: Iterable[Tuple[int, ...]], gamma: float,
+                       block: int, param_bytes: int,
+                       dtype_bytes: int = 2) -> dict:
+    """Total training-memory model: params + all stashed activations
+    (training stashes every layer's activations for backward).  Returns the
+    dense and DSG-compressed totals and the compression ratio — the paper's
+    Fig. 6(a) quantities."""
+    dense_act = sum(dense_stash_bytes(s, dtype_bytes) for s in layer_shapes)
+    dsg_act = sum(dsg_stash_bytes(s, gamma, block, dtype_bytes)
+                  for s in layer_shapes)
+    dense_total = param_bytes + dense_act
+    dsg_total = param_bytes + dsg_act
+    return {
+        "dense_total": dense_total,
+        "dsg_total": dsg_total,
+        "dense_activations": dense_act,
+        "dsg_activations": dsg_act,
+        "ratio_total": dense_total / max(dsg_total, 1),
+        "ratio_activations": dense_act / max(dsg_act, 1),
+    }
+
+
+def inference_footprint(layer_shapes: Iterable[Tuple[int, ...]], gamma: float,
+                        block: int, param_bytes: int,
+                        dtype_bytes: int = 2) -> dict:
+    """Inference stores params + the single largest layer activation
+    (paper §3.3)."""
+    shapes = list(layer_shapes)
+    dense_act = max(dense_stash_bytes(s, dtype_bytes) for s in shapes)
+    dsg_act = max(dsg_stash_bytes(s, gamma, block, dtype_bytes)
+                  for s in shapes)
+    return {
+        "dense_total": param_bytes + dense_act,
+        "dsg_total": param_bytes + dsg_act,
+        "ratio_total": (param_bytes + dense_act) / max(param_bytes + dsg_act, 1),
+    }

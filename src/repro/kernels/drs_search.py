@@ -1,0 +1,73 @@
+"""DRS Pallas kernels: projection and virtual-score computation.
+
+drs_project: f(X) = X @ R^T — the dimension reduction itself.  On the MXU
+the ternary structure of R buys nothing over a dense matmul (DESIGN.md §2),
+so the kernel is a straight tiled matmul with k (the projected dim, a
+multiple of the 128 lane width by construction in projection.jll_dim).
+
+drs_scores: virtual pre-activations v = f(X) @ f(W), ReLU, and per-group
+reduction fused in one pass — the low-dimensional search the paper
+substitutes for the full VMM.  The (bm, bf) virtual-activation tile never
+leaves VMEM; only the (bm, bf/block) group scores are written to HBM —
+the kernel's HBM traffic is 1/block of the naive two-op formulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _project_kernel(x_ref, rt_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], rt_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+def drs_project(x: jax.Array, r: jax.Array, *, bm: int = 128,
+                interpret: bool = False) -> jax.Array:
+    """x (M, d), r (k, d) -> f(X) (M, k)."""
+    m, d = x.shape
+    k = r.shape[0]
+    bm = min(bm, m)
+    assert m % bm == 0
+    return pl.pallas_call(
+        _project_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d, k), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), x.dtype),
+        interpret=interpret,
+    )(x, r.T)
+
+
+def _scores_kernel(fx_ref, fw_ref, o_ref, *, block: int):
+    v = jnp.dot(fx_ref[...], fw_ref[...],
+                preferred_element_type=jnp.float32)      # (bm, bf)
+    bm, bf = v.shape
+    relu = jnp.maximum(v, 0.0)
+    o_ref[...] = relu.reshape(bm, bf // block, block).sum(-1).astype(
+        o_ref.dtype)
+
+
+def drs_scores(fx: jax.Array, fw: jax.Array, *, block: int = 128,
+               bm: int = 128, bf: int = 512,
+               interpret: bool = False) -> jax.Array:
+    """fx (M, k), fw (k, F) -> group scores (M, F/block)."""
+    m, k = fx.shape
+    f = fw.shape[1]
+    bm = min(bm, m)
+    bf = min(bf, f)
+    assert m % bm == 0 and f % bf == 0 and bf % block == 0
+    return pl.pallas_call(
+        functools.partial(_scores_kernel, block=block),
+        grid=(m // bm, f // bf),
+        in_specs=[pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+                  pl.BlockSpec((k, bf), lambda i, j: (0, j))],
+        out_specs=pl.BlockSpec((bm, bf // block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, f // block), jnp.float32),
+        interpret=interpret,
+    )(fx, fw)

@@ -1,0 +1,114 @@
+"""Flash attention (Pallas TPU): online-softmax attention whose score
+tiles never leave VMEM.
+
+Motivation (EXPERIMENTS.md §Roofline): the prefill_32k cells are
+memory-bound on the (B,H,S,T)-scale score/probability traffic of the
+XLA-level attention chain (e.g. llava-next-34b prefill: 59 s memory term
+vs 2.6 s compute).  This kernel holds the (block_q, block_k) score tile
+and the (block_q,) running max/sum in VMEM scratch across the key pass —
+HBM traffic drops to Q/K/V/O streaming:
+
+    traffic_flash ~ B*H*(S*D*3 + S*D) * bytes        (vs + B*H*S*T*c f32)
+
+Grid: (B*H, S/block_q, T/block_k), key-block innermost so the scratch
+accumulators carry across the revisit (sequential TPU grid).  Causal
+masking uses absolute indices; fully-masked key blocks short-circuit via
+pl.when (real skipped MXU work for the upper triangle).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, block_q: int, block_k: int,
+            nk: int, offset: int):
+    """offset = T - S: query row i holds absolute position i + offset
+    (decode/suffix convention — matches jnp.tril(..., T - S))."""
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qb * block_q + offset
+    k_start = kb * block_k
+    # causal: the whole key block is in the future -> nothing to do
+    run = (k_start <= q_start + block_q - 1) if causal else True
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))) * scale       # (bq, bk)
+        if causal:
+            qi = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+            ki = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+            s = jnp.where(ki <= qi, s, NEG)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        if causal:
+            p = jnp.where(ki <= qi, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-20)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q (BH, S, D), k/v (BH, T, D) -> (BH, S, D).
+
+    Heads are pre-flattened into the leading dim (callers fold B*H; GQA
+    callers repeat or group upstream)."""
+    bh, s_len, d = q.shape
+    t_len = k.shape[1]
+    block_q = min(block_q, s_len)
+    block_k = min(block_k, t_len)
+    assert s_len % block_q == 0 and t_len % block_k == 0
+    nq, nk = s_len // block_q, t_len // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          block_q=block_q, block_k=block_k, nk=nk,
+                          offset=t_len - s_len if causal else 0),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s_len, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),     # running max
+            pltpu.VMEM((block_q,), jnp.float32),     # running sum
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

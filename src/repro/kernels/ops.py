@@ -1,0 +1,56 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with interpret=True — the
+kernel body runs in Python per grid cell, validating logic and BlockSpec
+indexing exactly as the Mosaic compiler would see them.  On TPU the same
+call sites compile natively.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import drs_search, dsg_ffn, flash_attention as fa, ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("bm",))
+def drs_project(x, r, bm: int = 128):
+    return drs_search.drs_project(x, r, bm=bm, interpret=_on_cpu())
+
+
+@partial(jax.jit, static_argnames=("block", "bm", "bf"))
+def drs_scores(fx, fw, block: int = 128, bm: int = 128, bf: int = 512):
+    return drs_search.drs_scores(fx, fw, block=block, bm=bm, bf=bf,
+                                 interpret=_on_cpu())
+
+
+@partial(jax.jit, static_argnames=("block", "bm", "bf"))
+def dsg_ffn_fwd(x, wg, wu, wd, token_mask, block: int = 128,
+                bm: int = 128, bf: int = 128):
+    return dsg_ffn.dsg_ffn(x, wg, wu, wd, token_mask, block=block,
+                           bm=bm, bf=bf, interpret=_on_cpu())
+
+
+def dsg_ffn_full(x, wg, wu, wd, r, fw, gamma: float, block: int = 128):
+    """End-to-end DSG FFN through the kernels: project -> scores ->
+    shared-threshold mask -> block-skip FFN.  Mirrors the pure-JAX
+    swiglu_dsg_mask path; used by benchmarks and the kernel parity tests."""
+    from repro.core import drs as drs_mod
+    fx = drs_project(x, r)
+    scores = drs_scores(fx, fw, block=block)
+    cfg = drs_mod.DRSConfig(gamma=gamma, block=block, threshold_mode="topk")
+    mask, _ = drs_mod.select_mask(scores, fw.shape[1], cfg)
+    return dsg_ffn_fwd(x, wg, wu, wd, mask, block=block)
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    return fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                              block_k=block_k, interpret=_on_cpu())

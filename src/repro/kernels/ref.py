@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def drs_project_ref(x: jax.Array, r: jax.Array) -> jax.Array:
+    """f(X) = X @ R^T.  x (M, d), r (k, d) -> (M, k).
+
+    R is the Achlioptas ternary projection (already scaled by 1/sqrt(k));
+    on the MXU this is an ordinary small matmul (DESIGN.md §2)."""
+    return x @ r.T
+
+
+def drs_scores_ref(fx: jax.Array, fw: jax.Array, block: int) -> jax.Array:
+    """Virtual activations + per-group post-ReLU mass.
+
+    fx (M, k), fw (k, F) -> scores (M, F/block)."""
+    v = fx @ fw
+    m, f = v.shape
+    return jax.nn.relu(v).reshape(m, f // block, block).sum(-1)
+
+
+def dsg_ffn_ref(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
+                token_mask: jax.Array, block: int) -> jax.Array:
+    """Masked SwiGLU FFN oracle.
+
+    x (M, d); wg/wu (d, F); wd (F, d); token_mask (M, F/block) in {0,1}.
+    y = (silu(x@wg) * (x@wu) * expand(mask)) @ wd."""
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    m, f = h.shape
+    hm = h.reshape(m, f // block, block) * token_mask[..., None]
+    return hm.reshape(m, f) @ wd
+
+
+def masked_matmul_ref(x: jax.Array, w: jax.Array, token_mask: jax.Array,
+                      block: int) -> jax.Array:
+    """Column-block-masked matmul oracle: y = (x @ w) * expand(mask).
+
+    x (M, d), w (d, F), token_mask (M, F/block)."""
+    y = x @ w
+    m, f = y.shape
+    ym = y.reshape(m, f // block, block) * token_mask[..., None]
+    return ym.reshape(m, f)
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """Oracle for the flash kernel: full-softmax attention.
+    q (BH, S, D), k/v (BH, T, D)."""
+    import math
+    s_len, t_len = q.shape[1], k.shape[1]
+    sc = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / math.sqrt(q.shape[-1])
+    if causal:
+        mask = jnp.tril(jnp.ones((s_len, t_len), bool), t_len - s_len)
+        sc = jnp.where(mask, sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))

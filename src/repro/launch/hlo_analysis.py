@@ -1,0 +1,332 @@
+"""HLO-text analyzer: correct per-device FLOP / byte / collective accounting.
+
+Why this exists: XLA's `compiled.cost_analysis()` counts a `while` body
+ONCE, so any lax.scan-over-layers model under-reports FLOPs by ~n_layers,
+and collectives inside the scanned layer are likewise dropped from naive
+text scans.  This module parses the compiled (post-SPMD, per-device) HLO:
+
+  * splits the module into computations,
+  * computes dot FLOPs from operand/output shapes (2*prod(out)*prod(contract)),
+  * sums collective payload bytes (result-shape convention),
+  * estimates HBM traffic as sum(output+operand bytes) of top-level ops
+    (fusion-internal ops excluded — they live in registers/VMEM),
+  * resolves the call graph, multiplying `while` bodies by their
+    backend_config known_trip_count (nested loops compose).
+
+Known approximations (documented in EXPERIMENTS.md):
+  * conditional branches are counted at max(branch) cost;
+  * sort/top-k comparator FLOPs ignored (negligible);
+  * HBM bytes are an upper-ish estimate (no cache reuse modeling).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->\s+.*\{")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s+=\s+(.+?)\s+([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:\s*{[\\"]*n[\\"]*:[\\"]*(\d+)')
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type str
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(m.group(2))
+                if m.group(1):
+                    entry = m.group(2)
+                # parameters are declared in the signature; their shapes
+                # also appear as "%x = T[...] parameter(n)" lines in-body.
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = Op(m.group(1), m.group(2), m.group(3), line)
+            cur.ops.append(op)
+            cur.symbols[m.group(1)] = m.group(2)
+    return comps, entry
+
+
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_RE = re.compile(r"(?:true|false)_computation=%?([\w.\-]+)")
+
+
+def _operand_names(line: str) -> List[str]:
+    m = _OPERANDS_RE.search(line)
+    if not m:
+        return []
+    return re.findall(r"%([\w.\-]+)", m.group(1))
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_dt, out_dims = _shape_dims(op.type_str)
+    opnds = _operand_names(op.line)
+    if not opnds:
+        return 0.0
+    lhs_type = comp.symbols.get(opnds[0], "")
+    _, lhs_dims = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx:
+                i = int(idx)
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    return 2.0 * out_n * contract
+
+
+def _fusion_traffic(comp: Computation) -> float:
+    """HBM traffic of one fusion call: actually-read operand bytes + the
+    written bytes.
+
+    * a parameter consumed ONLY by dynamic-slice ops contributes the slice
+      sizes, not the full buffer (scan stashes are read one layer-slice at
+      a time);
+    * if the root is a dynamic-update-slice (in-place stash write under
+      buffer aliasing) the write is the update size, not the buffer size.
+    """
+    if not comp.ops:
+        return 0.0
+    consumers: Dict[str, List[Op]] = {}
+    for op in comp.ops:
+        for o in _operand_names(op.line):
+            consumers.setdefault(o, []).append(op)
+
+    def _slicey(chain_ops) -> bool:
+        """True if every consumer only slices/updates-in-place (possibly
+        through converts) — the buffer itself is not streamed."""
+        for c in chain_ops:
+            if c.opcode in ("dynamic-slice",):
+                continue
+            if c.opcode == "dynamic-update-slice":
+                continue
+            if c.opcode in ("convert", "bitcast", "copy"):
+                if not _slicey(consumers.get(c.name, [])):
+                    return False
+                continue
+            return False
+        return True
+
+    total = 0.0
+    for op in comp.ops:
+        if op.opcode != "parameter":
+            continue
+        cons = consumers.get(op.name, [])
+        if cons and _slicey(cons):
+            # count only the sliced reads; in-place DUS buffers are free
+            # (the update write is the root / another param)
+            def _slice_bytes(ops_):
+                t = 0
+                for c in ops_:
+                    if c.opcode == "dynamic-slice":
+                        t += _shape_bytes(c.type_str)
+                    elif c.opcode in ("convert", "bitcast", "copy"):
+                        t += _slice_bytes(consumers.get(c.name, []))
+                return t
+            total += _slice_bytes(cons)
+        else:
+            total += _shape_bytes(op.type_str)
+
+    # root write: walk back through converts to find an in-place DUS
+    root = comp.ops[-1]
+    seen = root
+    while seen.opcode in ("convert", "bitcast", "copy"):
+        ops_ = _operand_names(seen.line)
+        prev = next((o for o in comp.ops if o.name == (ops_[0] if ops_
+                                                       else "")), None)
+        if prev is None:
+            break
+        seen = prev
+    if seen.opcode == "dynamic-update-slice":
+        opnds = _operand_names(seen.line)
+        if len(opnds) >= 2 and opnds[1] in comp.symbols:
+            total += _shape_bytes(comp.symbols[opnds[1]])
+        else:
+            total += _shape_bytes(seen.type_str)
+    else:
+        total += _shape_bytes(root.type_str)
+    return total
+
+
+# opcodes whose call-site bytes are handled elsewhere or are free
+_NO_BYTES = ("parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "while", "fusion", "conditional", "after-all",
+             "partition-id", "replica-id")
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v * mult
+
+
+def analyze(text: str) -> dict:
+    comps, entry = parse_module(text)
+    memo: Dict[Tuple[str, bool], Cost] = {}
+
+    def resolve(name: str, top_level: bool) -> Cost:
+        key = (name, top_level)
+        if key in memo:
+            return memo[key]
+        memo[key] = Cost()          # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[key]
+        c = Cost()
+        for op in comp.ops:
+            if op.opcode == "dot":
+                c.flops += _dot_flops(op, comp)
+            kind = next((k for k in COLLECTIVES
+                         if op.opcode in (k, k + "-start")), None)
+            if kind is not None:
+                nb = _shape_bytes(op.type_str)
+                c.coll_bytes[kind] = c.coll_bytes.get(kind, 0.0) + nb
+                c.coll_counts[kind] = c.coll_counts.get(kind, 0.0) + 1
+                if "f32[" in op.type_str:
+                    # tracked separately: XLA:CPU float-normalization
+                    # promotes bf16 compute to f32 BEFORE partitioning, so
+                    # collectives that are bf16 on TPU appear as f32 here
+                    # (roofline applies the dtype correction).
+                    c.coll_bytes[kind + "_f32"] = \
+                        c.coll_bytes.get(kind + "_f32", 0.0) + nb
+            if top_level and op.opcode not in _NO_BYTES:
+                if op.opcode == "dynamic-update-slice":
+                    # in-place write: update read+write, buffer untouched
+                    opnds = _operand_names(op.line)
+                    if len(opnds) >= 2 and opnds[1] in comp.symbols:
+                        c.bytes += 2 * _shape_bytes(comp.symbols[opnds[1]])
+                else:
+                    c.bytes += _shape_bytes(op.type_str)
+                    for o in _operand_names(op.line):
+                        if o in comp.symbols:
+                            c.bytes += _shape_bytes(comp.symbols[o])
+            if top_level and op.opcode == "fusion":
+                m = _CALLS_RE.search(op.line)
+                if m and m.group(1) in comps:
+                    c.bytes += _fusion_traffic(comps[m.group(1)])
+            # --- call edges ---
+            if op.opcode == "while":
+                trip = 1
+                m = _TRIP_RE.search(op.line)
+                if m:
+                    trip = int(m.group(1))
+                b = _BODY_RE.search(op.line)
+                if b:
+                    c.add(resolve(b.group(1), top_level), trip)
+                cd = _COND_RE.search(op.line)
+                if cd:
+                    c.add(resolve(cd.group(1), top_level), trip + 1)
+            elif op.opcode == "fusion":
+                m = _CALLS_RE.search(op.line)
+                if m:
+                    c.add(resolve(m.group(1), False), 1.0)
+            elif op.opcode in ("call", "custom-call", "sort", "reduce",
+                               "reduce-window", "scatter", "select-and-scatter",
+                               "map", "all-reduce", "reduce-scatter"):
+                m = _TOAPPLY_RE.search(op.line) or _CALLS_RE.search(op.line)
+                if m:
+                    c.add(resolve(m.group(1), False), 1.0)
+            elif op.opcode == "conditional":
+                branches = []
+                m = _BRANCHES_RE.search(op.line)
+                if m:
+                    branches = re.findall(r"%([\w.\-]+)", m.group(1))
+                else:
+                    branches = _TF_RE.findall(op.line)
+                if branches:
+                    costs = [resolve(b, top_level) for b in branches]
+                    worst = max(costs, key=lambda x: x.flops)
+                    c.add(worst, 1.0)
+        memo[key] = c
+        return c
+
+    total = resolve(entry, True) if entry else Cost()
+    return {
+        "flops": total.flops,
+        "bytes": total.bytes,
+        "collectives": {k: {"bytes": total.coll_bytes.get(k, 0.0),
+                            "count": total.coll_counts.get(k, 0.0),
+                            "f32_bytes": total.coll_bytes.get(k + "_f32",
+                                                              0.0)}
+                        for k in COLLECTIVES},
+        "collective_total_bytes": sum(
+            v for k, v in total.coll_bytes.items()
+            if not k.endswith("_f32")),
+    }
+
+
+if __name__ == "__main__":
+    import sys
+    with open(sys.argv[1]) as f:
+        print(json.dumps(analyze(f.read()), indent=1))

@@ -1,0 +1,183 @@
+"""Mamba2 (SSD) block — chunked scan form for training/prefill, O(1)-state
+recurrent form for decode.  Used by zamba2-7b (hybrid backbone).
+
+Simplifications vs the reference CUDA implementation (DESIGN.md §10):
+n_groups=1 (B/C shared across heads), depthwise causal conv (k=4) applied to
+the x/B/C stream, scalar-per-head A.  The chunked algorithm follows the SSD
+paper: intra-chunk quadratic term + inter-chunk state passed by lax.scan —
+sub-quadratic in sequence length and scan-compact in HLO.
+
+DSG site (DESIGN.md §3): the in_projection output is SiLU-gated (z branch),
+so DRS estimates the z pre-activations and masks neuron groups of the
+(z, x) stream — masked groups skip their out_proj rows in the kernel path.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+CONV_K = 4
+
+
+class Mamba2Dims(NamedTuple):
+    d: int          # model dim
+    d_in: int       # inner dim (expand * d)
+    heads: int      # H
+    head_dim: int   # P = d_in / H
+    n: int          # state size N
+    chunk: int
+
+
+def dims(d_model: int, expand: int, n_state: int, heads: int,
+         chunk: int) -> Mamba2Dims:
+    d_in = expand * d_model
+    h = heads or max(1, d_in // 64)
+    return Mamba2Dims(d_model, d_in, h, d_in // h, n_state, chunk)
+
+
+def init_mamba2(key: jax.Array, dm: Mamba2Dims, dtype=jnp.float32) -> dict:
+    """Head-parallel TP layout (EXPERIMENTS.md §Perf C3): the in-projection
+    is SPLIT per stream instead of one fused (d, 2*d_in+2N+H) matrix —
+    w_z/w_x are column-sharded over 'model' so the gate, conv, and the
+    whole chunked SSM core run head-sharded (d_in/shards per device);
+    the fused row-parallel layout left the entire SSM core replicated
+    across the model axis.  B/C/dt are small and stay replicated."""
+    ks = jax.random.split(key, 6)
+    return {
+        "w_z": dense_init(ks[0], (dm.d, dm.d_in), fan_in=dm.d, dtype=dtype),
+        "w_x": dense_init(ks[1], (dm.d, dm.d_in), fan_in=dm.d, dtype=dtype),
+        "w_bcdt": dense_init(ks[2], (dm.d, 2 * dm.n + dm.heads),
+                             fan_in=dm.d, dtype=dtype),
+        "conv_x": (jax.random.normal(ks[3], (CONV_K, dm.d_in)) /
+                   math.sqrt(CONV_K)).astype(dtype),
+        "conv_bc": (jax.random.normal(ks[4], (CONV_K, 2 * dm.n)) /
+                    math.sqrt(CONV_K)).astype(dtype),
+        "a_log": jnp.zeros((dm.heads,), jnp.float32),
+        "dt_bias": jnp.full((dm.heads,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((dm.heads,), jnp.float32),
+        "w_out": dense_init(ks[5], (dm.d_in, dm.d), fan_in=dm.d_in,
+                            dtype=dtype),
+    }
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv along time.  seq (B,S,C), w (K,C).
+    Returns (out (B,S,C), new_state (B,K-1,C))."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((seq.shape[0], k - 1, seq.shape[-1]), seq.dtype)
+    padded = jnp.concatenate([state, seq], axis=1)
+    out = sum(padded[:, i:i + seq.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out), padded[:, -(k - 1):]
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+                cmat: jax.Array, dm: Mamba2Dims,
+                h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    xh (B,S,H,P), dt (B,S,H) [post-softplus], a (B,S,H) = A*dt (negative),
+    bmat/cmat (B,S,N).  Returns (y (B,S,H,P), h_final (B,H,N,P))."""
+    b, s, h, p = xh.shape
+    q = min(dm.chunk, s)
+    if s % q:
+        # ragged tail: pad with dt=0 tokens (a = A*dt = 0 -> decay 1,
+        # x*dt = 0 -> identity on the carried state); outputs sliced off.
+        pad = q - s % q
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        y, hf = ssd_chunked(zf(xh), zf(dt), zf(a), zf(bmat), zf(cmat), dm,
+                            h0)
+        return y[:, :s], hf
+    nc = s // q
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape((b, nc, q) + t.shape[2:]), 1, 0)
+
+    xc, dtc, ac = to_chunks(xh), to_chunks(dt), to_chunks(a)
+    bc, cc = to_chunks(bmat), to_chunks(cmat)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, dm.n, p), jnp.float32)
+
+    causal = jnp.tril(jnp.ones((q, q), bool))
+
+    def body(hprev, ch):
+        x_i, dt_i, a_i, b_i, c_i = ch
+        la = jnp.cumsum(a_i, axis=1)                       # (B,Q,H)
+        # intra-chunk quadratic term.  Gate math (cumsum/exp) stays f32;
+        # the (B,Q,Q,H) tensors — the dominant HBM traffic of the chunked
+        # scan (EXPERIMENTS.md §Perf C) — are cast to the compute dtype
+        # before the einsums, with f32 kept for the carried state.
+        cb = jnp.einsum("bin,bjn->bij", c_i, b_i)          # (B,Q,Q)
+        decay = jnp.exp(la[:, :, None] - la[:, None])      # (B,Q,Q,H) i>=j
+        m = (cb[..., None].astype(jnp.float32) * decay
+             * causal[None, :, :, None]).astype(xh.dtype)
+        xdt = (x_i.astype(jnp.float32) * dt_i[..., None]).astype(xh.dtype)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m, xdt)
+        # inter-chunk from carried state
+        y_inter = jnp.einsum("bin,bhnp->bihp", c_i.astype(jnp.float32),
+                             hprev) * jnp.exp(la)[..., None]
+        # chunk contribution to the state
+        w = jnp.exp(la[:, -1:] - la) * dt_i                # (B,Q,H)
+        s_c = jnp.einsum("bjn,bjhp->bhnp", b_i.astype(jnp.float32),
+                         x_i.astype(jnp.float32) * w[..., None])
+        hnew = hprev * jnp.exp(la[:, -1])[:, :, None, None] + s_c
+        return hnew, (y_intra.astype(jnp.float32) + y_inter).astype(xh.dtype)
+
+    h_final, yc = jax.lax.scan(body, h0, (xc, dtc, ac, bc, cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, s, h, p)
+    return y, h_final
+
+
+def mamba2_forward(p: dict, x: jax.Array, dm: Mamba2Dims,
+                   state: Optional[dict] = None,
+                   gate_mask: Optional[jax.Array] = None):
+    """Full block.  Training/prefill: state=None.  Returns (y, new_state)
+    where state = {'ssm': (B,H,N,P), 'conv': (B,K-1,C)}.
+
+    gate_mask, if given, is an expanded {0,1} neuron mask (B,S,d_in) from
+    the DRS over the z branch, applied to the SiLU gate — the DSG
+    integration point (masked groups skip z columns / out_proj rows in the
+    kernel path)."""
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])          # col-sharded
+    xs = jnp.einsum("bsd,de->bse", x, p["w_x"])         # col-sharded
+    bcdt = jnp.einsum("bsd,de->bse", x, p["w_bcdt"])    # small, replicated
+    bc, dt = bcdt[..., :2 * dm.n], bcdt[..., 2 * dm.n:]
+    xs, new_conv_x = _causal_conv(xs, p["conv_x"],
+                                  state["conv_x"] if state else None)
+    bc, new_conv_bc = _causal_conv(bc, p["conv_bc"],
+                                   state["conv_bc"] if state else None)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,S,H)
+    a = -jnp.exp(p["a_log"]) * dt                                  # (B,S,H)
+    xh = xs.reshape(xs.shape[:2] + (dm.heads, dm.head_dim))
+
+    h0 = state["ssm"] if state else None
+    if x.shape[1] == 1 and state is not None:
+        # decode: single-step recurrence
+        hprev = h0
+        xdt = xh[:, 0].astype(jnp.float32) * dt[:, 0, :, None]     # (B,H,P)
+        s_c = jnp.einsum("bn,bhp->bhnp", bmat[:, 0].astype(jnp.float32), xdt)
+        hnew = hprev * jnp.exp(a[:, 0])[:, :, None, None] + s_c
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32),
+                       hnew)[:, None]
+        y = jnp.moveaxis(y, 1, 1)                                  # (B,1,H,P)
+        h_final = hnew
+    else:
+        y, h_final = ssd_chunked(xh, dt, a, bmat, cmat, dm, h0)
+
+    y = y + xh.astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.reshape(x.shape[0], x.shape[1], dm.d_in).astype(x.dtype)
+    gate = jax.nn.silu(z)
+    if gate_mask is not None:
+        gate = gate * gate_mask
+    y = y * gate
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])      # row-parallel psum
+    return out, {"ssm": h_final, "conv_x": new_conv_x,
+                 "conv_bc": new_conv_bc}

@@ -1,0 +1,258 @@
+"""Decoder-only transformer assembly (dense / MoE / VLM families).
+
+Layers are stacked (L, ...) pytrees scanned with lax.scan — HLO size is
+depth-independent (required for the 512-device dry-run compiles) and remat
+wraps the scan body.  The DSG state mirrors the layer stack: one shared
+projection R (d -> k) plus per-layer f(W) buffers refreshed by the training
+loop every cfg.dsg.refresh_every steps.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.core import dsg_linear as dl
+from repro.core import projection
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import embed_init, norm_apply, norm_init
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key: jax.Array, cfg: ModelConfig) -> dict:
+    ka, kf = jax.random.split(key)
+    dt = _dtype(cfg)
+    p = {
+        "ln_attn": norm_init(cfg.norm, cfg.d_model, dt),
+        "attn": attn.init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                    cfg.head_dim, dt),
+        "ln_ffn": norm_init(cfg.norm, cfg.d_model, dt),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_mod.init_moe(kf, cfg.d_model, cfg.moe_experts,
+                                    cfg.moe_d_ff, cfg.moe_shared, dt)
+    else:
+        p["ffn"] = dl.init_swiglu(kf, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    p = {
+        "embed": embed_init(ke, cfg.vocab, cfg.d_model, dt),
+        "layers": layers,
+        "ln_final": norm_init(cfg.norm, cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(kh, (cfg.d_model, cfg.vocab))
+                        / math.sqrt(cfg.d_model)).astype(dt)
+    return p
+
+
+def init_dsg(key: jax.Array, params: dict, cfg: ModelConfig) -> Optional[dict]:
+    """DSG buffers: shared R + per-layer f(W) stacks (DESIGN.md §5)."""
+    if not cfg.dsg.enabled:
+        return None
+    dt = _dtype(cfg)
+    if cfg.is_moe:
+        fe = cfg.moe_d_ff
+        k = dl.proj_dim(cfg.d_model, fe, cfg.dsg)
+        r = projection.make_projection(key, k, cfg.d_model, dtype=dt)
+        st = {"r": r}
+        st["fw_experts"] = jnp.einsum(
+            "kd,ledf->lekf", r, params["layers"]["moe"]["w_gate"])
+        if cfg.moe_shared > 0:
+            st["fw_shared"] = jnp.einsum(
+                "kd,ldf->lkf", r, params["layers"]["moe"]["shared"]["w_gate"])
+        return st
+    k = dl.proj_dim(cfg.d_model, cfg.d_ff, cfg.dsg)
+    r = projection.make_projection(key, k, cfg.d_model, dtype=dt)
+    fw = jnp.einsum("kd,ldf->lkf", r, params["layers"]["ffn"]["w_gate"])
+    return {"r": r, "fw": fw}
+
+
+def refresh_dsg(dsg: dict, params: dict, cfg: ModelConfig) -> dict:
+    """Recompute f(W) from current weights (paper: every 50 steps)."""
+    if dsg is None:
+        return None
+    out = {"r": dsg["r"]}
+    if cfg.is_moe:
+        out["fw_experts"] = jnp.einsum(
+            "kd,ledf->lekf", dsg["r"], params["layers"]["moe"]["w_gate"])
+        if "fw_shared" in dsg:
+            out["fw_shared"] = jnp.einsum(
+                "kd,ldf->lkf", dsg["r"],
+                params["layers"]["moe"]["shared"]["w_gate"])
+    else:
+        out["fw"] = jnp.einsum("kd,ldf->lkf", dsg["r"],
+                               params["layers"]["ffn"]["w_gate"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer_dsg(dsg: Optional[dict], cfg: ModelConfig):
+    """Slice the per-layer DSG leaves for scan xs (r stays shared)."""
+    if dsg is None:
+        return None
+    return {k: v for k, v in dsg.items() if k != "r"}
+
+
+def _ffn_apply(p: dict, dsg_l: Optional[dict], r: Optional[jax.Array],
+               x: jax.Array, cfg: ModelConfig, mesh, batch_axes):
+    """FFN or MoE with DSG; returns (y, aux)."""
+    if cfg.is_moe:
+        dsg_state = None
+        if dsg_l is not None:
+            dsg_state = {"r": r, "fw_experts": dsg_l["fw_experts"]}
+            if "fw_shared" in dsg_l:
+                dsg_state["shared"] = {"r": r, "fw": dsg_l["fw_shared"]}
+        return moe_mod.moe_ffn(
+            p["moe"], x, n_experts=cfg.moe_experts, top_k=cfg.moe_topk,
+            capacity_factor=cfg.moe_capacity_factor, dsg=cfg.dsg,
+            dsg_state=dsg_state, mesh=mesh, batch_axes=batch_axes,
+            aux_kind=cfg.moe_aux)
+    st = {"r": r, "fw": dsg_l["fw"]} if dsg_l is not None else None
+    return dl.swiglu_ffn(p["ffn"], x, st, cfg.dsg), jnp.float32(0.0)
+
+
+def _block(p: dict, dsg_l, r, x, cfg: ModelConfig, q_pos, cache, cache_pos,
+           mesh, batch_axes):
+    from repro.parallel import context as pctx
+
+    def boundary(t):
+        """Perf lever (EXPERIMENTS.md §Perf A1/A3): force the TP branch
+        psum to land at the bf16 branch boundary.  A sharding constraint
+        alone does NOT do it (partial-sum state is orthogonal to sharding
+        and GSPMD defers the all-reduce past the fp32 cast inside the next
+        norm — 2x wire bytes); an optimization barrier is a wall the
+        partitioner cannot defer a pending reduction across."""
+        if cfg.branch_constrain:
+            return jax.lax.optimization_barrier(t)
+        return t
+
+    if cfg.seq_sharded_residual:
+        # Megatron-SP: residual stream (== the remat stash) seq-sharded
+        ba = pctx.batch_axes()
+        x = pctx.constrain(x, ba, "model", None)
+    h = norm_apply(cfg.norm, p["ln_attn"], x)
+    a, new_cache = attn.self_attention(
+        p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        rope_theta=cfg.rope_theta, q_pos=q_pos, causal=True,
+        window=cfg.window, cache=cache, cache_pos=cache_pos,
+        shard=cfg.attn_shard, bf16_scores=cfg.attn_bf16_scores)
+    x = x + boundary(a)
+    h = norm_apply(cfg.norm, p["ln_ffn"], x)
+    f, aux = _ffn_apply(p, dsg_l, r, h, cfg, mesh, batch_axes)
+    x = x + boundary(f)
+    if cfg.seq_sharded_residual:
+        x = pctx.constrain(x, pctx.batch_axes(), "model", None)
+    return x, new_cache, aux
+
+
+def forward(params: dict, dsg: Optional[dict], cfg: ModelConfig,
+            tokens: jax.Array, *, prefix_embeds: Optional[jax.Array] = None,
+            cache: Optional[dict] = None, pos0=0,
+            mesh: Optional[Mesh] = None, batch_axes=None,
+            last_only: bool = False):
+    """tokens (B, S) -> (logits, new_cache, aux_loss).
+
+    prefix_embeds (B, P, d): VLM stub patch embeddings, prepended.
+    cache: stacked per-layer KV {'k': (L,B,Smax,Kv,D), 'v': ...} for decode.
+    """
+    x = params["embed"].astype(_dtype(cfg))[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    q_pos = pos0 + jnp.arange(s)
+
+    r = dsg["r"] if dsg is not None else None
+    dsg_stack = _layer_dsg(dsg, cfg)
+
+    def body(xc, scanned):
+        p_l, dsg_l, cache_l = scanned
+        y, new_cache, aux = _block(p_l, dsg_l, r, xc, cfg, q_pos, cache_l,
+                                   pos0, mesh, batch_axes)
+        return y, (new_cache, aux)
+
+    if cfg.remat and cache is None:
+        body = jax.checkpoint(body)
+
+    x, (new_cache, aux) = jax.lax.scan(
+        body, x, (params["layers"], dsg_stack, cache))
+    x = norm_apply(cfg.norm, params["ln_final"], x)
+    if last_only:
+        x = x[:, -1:]
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(_dtype(cfg))
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, new_cache, jnp.sum(aux)
+
+
+# ---------------------------------------------------------------------------
+# task-level steps
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    if mask is not None:
+        return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(ce)
+
+
+def train_loss(params: dict, dsg: Optional[dict], cfg: ModelConfig,
+               batch: dict, mesh=None, batch_axes=None) -> jax.Array:
+    tokens, labels = batch["tokens"], batch["labels"]
+    prefix = batch.get("prefix_embeds")
+    logits, _, aux = forward(params, dsg, cfg, tokens, prefix_embeds=prefix,
+                             mesh=mesh, batch_axes=batch_axes)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:]
+    return cross_entropy(logits, labels) + 0.01 * aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.float32) -> dict:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(params, dsg, cfg: ModelConfig, tokens, cache,
+            prefix_embeds=None, mesh=None, batch_axes=None):
+    """Prefill the cache with the prompt; returns (last_logits, cache)."""
+    logits, new_kv, _ = forward(params, dsg, cfg, tokens,
+                                prefix_embeds=prefix_embeds, cache=cache,
+                                pos0=0, mesh=mesh, batch_axes=batch_axes,
+                                last_only=True)
+    return logits[:, -1], new_kv
+
+
+def decode_step(params, dsg, cfg: ModelConfig, token, cache, pos,
+                mesh=None, batch_axes=None):
+    """One decode step.  token (B, 1), pos scalar -> (logits (B, V), cache)."""
+    logits, new_cache, _ = forward(params, dsg, cfg, token, cache=cache,
+                                   pos0=pos, mesh=mesh,
+                                   batch_axes=batch_axes)
+    return logits[:, -1], new_cache

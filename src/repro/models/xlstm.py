@@ -1,0 +1,183 @@
+"""xLSTM blocks (mLSTM chunked-parallel + sLSTM recurrent) for xlstm-350m.
+
+mLSTM: matrix-memory LSTM — per head a (Dk x Dv) covariance state with
+exponential input gate and sigmoid forget gate; mathematically a gated
+linear attention, so the chunked scan mirrors mamba2.ssd_chunked with
+per-head q/k/v and a key-dim normalizer state.
+
+sLSTM: scalar-memory LSTM with exponential gating and stabilizer state,
+sequential lax.scan over time (recurrent by construction — this is the
+paper's point: xLSTM mixes both).  Diagonal recurrent weights (a documented
+simplification of the block-diagonal ones, DESIGN.md §10).
+
+DSG site: the block up-projection (d -> 2d, SiLU-gated) — DRS masks neuron
+groups of the gated stream, mirroring the FFN treatment.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+class MLSTMDims(NamedTuple):
+    d: int
+    heads: int
+    dk: int     # key/query dim per head
+    dv: int     # value dim per head
+    chunk: int
+
+
+def mlstm_dims(d: int, heads: int, chunk: int = 128) -> MLSTMDims:
+    return MLSTMDims(d, heads, d // heads, d // heads, chunk)
+
+
+def init_mlstm(key: jax.Array, dm: MLSTMDims, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    h, dk, dv = dm.heads, dm.dk, dm.dv
+    return {
+        "w_qkv": dense_init(ks[0], (dm.d, h * (2 * dk + dv)), fan_in=dm.d,
+                            dtype=dtype),
+        "w_gates": dense_init(ks[1], (dm.d, 2 * h), fan_in=dm.d,
+                              dtype=jnp.float32),
+        "b_gates": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]),
+        "w_out": dense_init(ks[2], (h * dv, dm.d), fan_in=h * dv, dtype=dtype),
+        "skip": jnp.ones((h,), jnp.float32),
+    }
+
+
+def mlstm_chunked(q, k, v, log_f, i_gate, dm: MLSTMDims,
+                  c0=None, n0=None):
+    """Chunked gated-linear-attention scan.
+
+    q/k/v (B,S,H,D*), log_f (B,S,H) = log sigmoid(f~), i_gate (B,S,H) >= 0.
+    State C (B,H,Dk,Dv), normalizer n (B,H,Dk).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    qn = q / math.sqrt(dk)
+    qchunk = min(dm.chunk, s)
+    nc = s // qchunk
+    assert nc * qchunk == s
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape((b, nc, qchunk) + t.shape[2:]), 1, 0)
+
+    qc, kc, vc = to_chunks(qn), to_chunks(k), to_chunks(v)
+    fc, ic = to_chunks(log_f), to_chunks(i_gate)
+    if c0 is None:
+        c0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.ones((b, h, dk), jnp.float32)
+    causal = jnp.tril(jnp.ones((qchunk, qchunk), bool))
+
+    def body(carry, ch):
+        c_prev, n_prev = carry
+        q_i, k_i, v_i, f_i, i_i = ch
+        lf = jnp.cumsum(f_i, axis=1)                        # (B,Q,H)
+        decay = jnp.exp(lf[:, :, None] - lf[:, None])       # (B,Q,Q,H)
+        qk = jnp.einsum("bihd,bjhd->bijh", q_i.astype(jnp.float32),
+                        k_i.astype(jnp.float32))
+        m = qk * decay * causal[None, :, :, None] * i_i[:, None]
+        y_intra = jnp.einsum("bijh,bjhv->bihv", m, v_i.astype(jnp.float32))
+        n_intra = jnp.sum(m, axis=2)                        # (B,Q,H)
+        y_inter = jnp.einsum("bihd,bhdv->bihv", q_i.astype(jnp.float32),
+                             c_prev) * jnp.exp(lf)[..., None]
+        n_inter = jnp.einsum("bihd,bhd->bih", q_i.astype(jnp.float32),
+                             n_prev) * jnp.exp(lf)
+        denom = jnp.maximum(jnp.abs(n_intra + n_inter), 1.0)[..., None]
+        y = (y_intra + y_inter) / denom
+        w = jnp.exp(lf[:, -1:] - lf) * i_i                  # (B,Q,H)
+        c_new = c_prev * jnp.exp(lf[:, -1])[:, :, None, None] + jnp.einsum(
+            "bjhd,bjhv->bhdv", k_i.astype(jnp.float32) * w[..., None],
+            v_i.astype(jnp.float32))
+        n_new = n_prev * jnp.exp(lf[:, -1])[:, :, None] + jnp.sum(
+            k_i.astype(jnp.float32) * w[..., None], axis=1)
+        return (c_new, n_new), y.astype(q.dtype)
+
+    (c_f, n_f), yc = jax.lax.scan(body, (c0, n0), (qc, kc, vc, fc, ic))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, s, h, dv)
+    return y, (c_f, n_f)
+
+
+def mlstm_forward(p: dict, x: jax.Array, dm: MLSTMDims,
+                  state: Optional[dict] = None):
+    b, s, _ = x.shape
+    h, dk, dv = dm.heads, dm.dk, dm.dv
+    qkv = jnp.einsum("bsd,de->bse", x, p["w_qkv"])
+    q, k, v = jnp.split(qkv.reshape(b, s, h, 2 * dk + dv),
+                        [dk, 2 * dk], axis=-1)
+    gates = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32), p["w_gates"]) \
+        + p["b_gates"]
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)             # (B,S,H)
+    i_gate = jnp.exp(jnp.minimum(i_raw, 8.0))               # stabilized exp gate
+    log_f = jax.nn.log_sigmoid(f_raw)
+
+    if s == 1 and state is not None:
+        c_prev, n_prev = state["c"], state["n"]
+        f1 = jnp.exp(log_f[:, 0])                           # (B,H)
+        kv = jnp.einsum("bhd,bhv->bhdv", k[:, 0].astype(jnp.float32),
+                        v[:, 0].astype(jnp.float32))
+        c_new = c_prev * f1[..., None, None] + i_gate[:, 0][..., None, None] * kv
+        n_new = n_prev * f1[..., None] + i_gate[:, 0][..., None] * \
+            k[:, 0].astype(jnp.float32)
+        qs = q[:, 0].astype(jnp.float32) / math.sqrt(dk)
+        num = jnp.einsum("bhd,bhdv->bhv", qs, c_new)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n_new)), 1.0)
+        y = (num / den[..., None])[:, None]                 # (B,1,H,Dv)
+        c_f, n_f = c_new, n_new
+    else:
+        c0 = state["c"] if state else None
+        n0 = state["n"] if state else None
+        y, (c_f, n_f) = mlstm_chunked(q, k, v, log_f, i_gate, dm, c0, n0)
+
+    out = jnp.einsum("bse,ed->bsd",
+                     y.astype(x.dtype).reshape(b, s, h * dv), p["w_out"])
+    return out, {"c": c_f, "n": n_f}
+
+
+# --- sLSTM -------------------------------------------------------------------
+
+def init_slstm(key: jax.Array, d: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), fan_in=d, dtype=dtype),
+        "r_diag": (jax.random.normal(ks[1], (4, d)) * 0.1).astype(jnp.float32),
+        "bias": jnp.concatenate([jnp.zeros((d,)), 2.0 * jnp.ones((d,)),
+                                 jnp.zeros((2 * d,))]),
+    }
+
+
+def slstm_forward(p: dict, x: jax.Array, state: Optional[dict] = None):
+    """Sequential sLSTM over time.  x (B,S,d).  State {'c','n','m','h'}."""
+    b, s, d = x.shape
+    pre = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["w_in"]) + p["bias"]
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state = {"c": zeros, "n": zeros + 1.0, "m": zeros, "h": zeros}
+
+    def step(carry, pre_t):
+        c, n, m, h = carry["c"], carry["n"], carry["m"], carry["h"]
+        rec = p["r_diag"] * h[:, None, :]                  # (B,4,d)
+        z_r, f_r, i_r, o_r = (pre_t[:, :d] + rec[:, 0],
+                              pre_t[:, d:2 * d] + rec[:, 1],
+                              pre_t[:, 2 * d:3 * d] + rec[:, 2],
+                              pre_t[:, 3 * d:] + rec[:, 3])
+        m_new = jnp.maximum(f_r + m, i_r)                  # stabilizer
+        i_g = jnp.exp(i_r - m_new)
+        f_g = jnp.exp(f_r + m - m_new)
+        z = jnp.tanh(z_r)
+        o = jax.nn.sigmoid(o_r)
+        c_new = f_g * c + i_g * z
+        n_new = f_g * n + i_g
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        new = {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+        return new, h_new
+
+    pre_t = jnp.moveaxis(pre, 1, 0)                        # (S,B,4d)
+    final, hs = jax.lax.scan(step, state, pre_t)
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)             # (B,S,d)
+    return y, final

@@ -1,0 +1,132 @@
+"""AdamW + schedules + global-norm clipping, with ZeRO-1 sharded state.
+
+No optax in this environment — this is a purpose-built, pjit-friendly
+implementation.  Optimizer state:
+    {"step", "m", "v", "master"(bf16 runs only)}
+m/v/master mirror the param tree; `zero1_specs` additionally shards them
+over the 'data' axis on the first replicated, divisible dim (ZeRO-1: the
+optimizer state, the largest training-memory consumer after activations,
+never lives replicated across data-parallel replicas).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"    # "cosine" | "linear" | "const"
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1) / max(cfg.warmup, 1))
+    if cfg.schedule == "const":
+        return cfg.lr * warm
+    frac = jnp.clip((s - cfg.warmup) / max(cfg.total_steps - cfg.warmup, 1),
+                    0.0, 1.0)
+    if cfg.schedule == "linear":
+        return cfg.lr * warm * (1.0 - frac)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+
+
+def init_opt(params: dict, use_master: bool) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    st = {"step": jnp.zeros((), jnp.int32),
+          "m": zeros,
+          "v": jax.tree.map(jnp.copy, zeros)}
+    if use_master:
+        st["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return st
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params: dict, grads: dict, opt: dict,
+                  cfg: AdamWConfig) -> tuple:
+    """One AdamW step.  Returns (new_params, new_opt, metrics)."""
+    step = opt["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    masters = opt.get("master", params)
+
+    def upd(p, g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m_new / b1c
+        vh = v_new / b2c
+        w32 = w.astype(jnp.float32)
+        w_new = w32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                            + cfg.weight_decay * w32)
+        return w_new, m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt["m"])
+    flat_v = jax.tree.leaves(opt["v"])
+    flat_w = jax.tree.leaves(masters)
+    new_w, new_m, new_v, new_p = [], [], [], []
+    for p, g, m, v, w in zip(flat_p, flat_g, flat_m, flat_v, flat_w):
+        w2, m2, v2 = upd(p, g, m, v, w)
+        new_w.append(w2)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_p.append(w2.astype(p.dtype))
+    new_opt = {"step": step,
+               "m": jax.tree.unflatten(treedef, new_m),
+               "v": jax.tree.unflatten(treedef, new_v)}
+    if "master" in opt:
+        new_opt["master"] = jax.tree.unflatten(treedef, new_w)
+    new_params = jax.tree.unflatten(treedef, new_p)
+    return new_params, new_opt, {"grad_norm": gnorm, "lr": lr}
+
+
+# --- ZeRO-1 spec derivation --------------------------------------------------
+
+def zero1_specs(pspecs, params, data_axis: str = "data"):
+    """Optimizer-state specs: param spec + 'data' on the first replicated,
+    divisible dim (the classic ZeRO-1 layout under GSPMD)."""
+    import numpy as np
+
+    def rule(spec: P, leaf):
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, (e, dim) in enumerate(zip(entries, leaf.shape)):
+            if e is None and dim % 16 == 0 and dim >= 16:
+                entries[i] = data_axis
+                return P(*entries)
+        return spec
+
+    return jax.tree.map(rule, pspecs, params,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_specs(pspecs, params, zero1: bool = True):
+    base = zero1_specs(pspecs, params) if zero1 else pspecs
+    st = {"step": P(), "m": base, "v": base}
+    return st
+
+
+def opt_specs_with_master(pspecs, params, zero1: bool = True):
+    st = opt_specs(pspecs, params, zero1)
+    st["master"] = st["m"]
+    return st

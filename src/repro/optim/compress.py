@@ -1,0 +1,81 @@
+"""Ternary gradient compression with error feedback (beyond-paper, §7.3).
+
+Reuses the paper's Achlioptas-ternary machinery on the *gradients*: before
+the cross-pod all-reduce, each shard quantizes its gradient block to
+{-s, 0, +s} with s = mean(|g|) over the non-zero set (TernGrad-flavored),
+keeps the quantization error in a feedback buffer added to the next step's
+gradient (error feedback makes the compression unbiased over time).
+
+Wire cost: 2 bits/element packed (we model 1/8 of fp32 = 16x reduction on
+the 'pod' axis all-reduce — the slowest links in a multi-pod fleet).
+The compressed collective for the SPMD path is expressed as
+quantize -> psum -> dequantize; tests verify the error-feedback telescoping
+property and convergence on a quadratic problem.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ternarize(g: jax.Array, threshold_frac: float = 0.7) -> Tuple[jax.Array, jax.Array]:
+    """g -> (ternary codes in {-1,0,+1} as int8-semantics float, scale).
+
+    threshold: |g| > threshold_frac * mean|g| participates; scale preserves
+    E[decoded] = E[g] over the kept set."""
+    g32 = g.astype(jnp.float32)
+    mean_abs = jnp.mean(jnp.abs(g32))
+    thr = threshold_frac * mean_abs
+    codes = jnp.sign(g32) * (jnp.abs(g32) > thr)
+    kept = jnp.maximum(jnp.sum(jnp.abs(codes)), 1.0)
+    scale = jnp.sum(jnp.abs(g32) * jnp.abs(codes)) / kept
+    return codes, scale
+
+
+def decode(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes * scale
+
+
+def compress_with_feedback(g: jax.Array, err: jax.Array,
+                           threshold_frac: float = 0.7):
+    """(gradient, error buffer) -> (decoded gradient, new error buffer)."""
+    corrected = g.astype(jnp.float32) + err
+    codes, scale = ternarize(corrected, threshold_frac)
+    dec = decode(codes, scale)
+    new_err = corrected - dec
+    return dec, new_err
+
+
+def compressed_psum(g: jax.Array, axis: str, err: jax.Array,
+                    threshold_frac: float = 0.7):
+    """Ternary-compressed all-reduce over `axis` (shard_map context).
+
+    Each participant sends codes (2-bit wire format) + one scalar scale;
+    the psum of decoded values equals the psum of per-shard ternary
+    approximations.  Returns (reduced, new_err)."""
+    dec, new_err = compress_with_feedback(g, err, threshold_frac)
+    return jax.lax.psum(dec, axis), new_err
+
+
+def tree_compress_with_feedback(grads, errs, threshold_frac: float = 0.7):
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errs)
+    dec, errs_new = [], []
+    for g, e in zip(flat_g, flat_e):
+        d, ne = compress_with_feedback(g, e, threshold_frac)
+        dec.append(d.astype(g.dtype))
+        errs_new.append(ne)
+    return (jax.tree.unflatten(treedef, dec),
+            jax.tree.unflatten(treedef, errs_new))
+
+
+def init_feedback(grads_template):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_template)
+
+
+def wire_bytes(g: jax.Array) -> int:
+    """Modeled wire bytes for the compressed representation."""
+    return (g.size * 2 + 7) // 8 + 4   # 2 bits/elem + fp32 scale

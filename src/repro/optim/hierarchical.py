@@ -1,0 +1,69 @@
+"""Hierarchical multi-pod gradient reduction with cross-pod compression.
+
+On a (pod, data, model) fleet the data-parallel gradient reduction spans
+pod x data, but the cross-pod links are the scarce resource (DCN or
+long-haul ICI vs in-pod ICI).  This module implements the standard
+hierarchy with the paper-flavored twist (DESIGN.md §7.3):
+
+    1. exact psum over the in-pod 'data' axis (fast links, full precision)
+    2. ternary quantization with error feedback (optim/compress.py — the
+       Achlioptas {-s,0,+s} machinery applied to gradients)
+    3. psum of the compressed representation over the 'pod' axis
+       (wire cost modeled at 2 bits/elem + scale: ~16x less than f32)
+    4. decode and average
+
+Error feedback makes the compression unbiased over steps (the residual is
+re-injected next step), so SGD converges on the exact gradient average in
+the telescoping sense — property-tested in tests/test_hierarchical.py on
+a real (pod=2, data=k) host mesh.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compress import ternarize
+
+
+def hierarchical_grad_reduce(g: jax.Array, err: jax.Array,
+                             pod_axis: str = "pod",
+                             data_axis: str = "data",
+                             threshold_frac: float = 0.7,
+                             compress: bool = True
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Inside shard_map: per-shard grad -> fleet-average grad.
+
+    g:   this shard's local gradient (identical shape everywhere)
+    err: this shard's error-feedback buffer (same shape)
+    Returns (averaged gradient, new error buffer)."""
+    n_data = jax.lax.psum(1, data_axis)
+    n_pod = jax.lax.psum(1, pod_axis)
+    # stage 1: exact in-pod average
+    g_pod = jax.lax.psum(g, data_axis) / n_data
+    if not compress:
+        return jax.lax.psum(g_pod, pod_axis) / n_pod, err
+    # stage 2: ternary + error feedback on the cross-pod stream
+    corrected = g_pod.astype(jnp.float32) + err
+    codes, scale = ternarize(corrected, threshold_frac)
+    decoded = codes * scale
+    new_err = corrected - decoded
+    # stage 3: compressed cross-pod sum.  On the wire this is the psum of
+    # 2-bit codes plus one scalar per shard; numerically psum(codes*scale)
+    # == sum of per-pod decodings (what each pod would reconstruct).
+    g_fleet = jax.lax.psum(decoded, pod_axis) / n_pod
+    return g_fleet.astype(g.dtype), new_err
+
+
+def tree_hierarchical_reduce(grads, errs, **kw):
+    """Pytree version for use inside a shard_map'd train step."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errs)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        rg, re = hierarchical_grad_reduce(g, e, **kw)
+        out_g.append(rg)
+        out_e.append(re)
+    return (jax.tree.unflatten(treedef, out_g),
+            jax.tree.unflatten(treedef, out_e))

@@ -1,0 +1,79 @@
+"""Trace-time parallel context.
+
+The launcher (or dry-run driver) installs the mesh before tracing a step
+function; model code consults the context to place sharding constraints.
+Constraints bake into the traced computation, so the context only needs to
+be set around trace time (jit.lower / first call).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import NamedTuple, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import Axes, axes_for_mesh, model_shards
+
+
+class ParallelCtx(NamedTuple):
+    mesh: Mesh
+    ax: Axes
+    n_model: int
+
+
+_CTX: Optional[ParallelCtx] = None
+
+
+def current() -> Optional[ParallelCtx]:
+    return _CTX
+
+
+@contextmanager
+def use_mesh(mesh: Optional[Mesh], batch_shardable: bool = True):
+    """Install a parallel context.  batch_shardable=False drops the batch
+    axes from activation constraints (e.g. long_500k with global_batch=1,
+    which cannot divide the data axes — a model-parallel-only workload)."""
+    global _CTX
+    prev = _CTX
+    if mesh is not None:
+        ax = axes_for_mesh(mesh)
+        if not batch_shardable:
+            ax = Axes(batch=None, model=ax.model)
+        _CTX = ParallelCtx(mesh, ax, model_shards(mesh))
+    else:
+        _CTX = None
+    try:
+        yield _CTX
+    finally:
+        _CTX = prev
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint against the active mesh; no-op outside a
+    parallel context or on a 1-device mesh."""
+    ctx = _CTX
+    if ctx is None or ctx.mesh.size == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def batch_axes():
+    ctx = _CTX
+    return ctx.ax.batch if ctx else None
+
+
+def resolve_attn_shard(mode: str, n_heads: int) -> str:
+    """'auto' -> 'head' when heads divide the model axis, else 'seq'."""
+    ctx = _CTX
+    if ctx is None or ctx.n_model == 1:
+        return "none"
+    if mode != "auto":
+        return mode
+    return "head" if n_heads % ctx.n_model == 0 else "seq"
+
+
+def divisible(n: int) -> bool:
+    ctx = _CTX
+    return ctx is not None and ctx.n_model > 1 and n % ctx.n_model == 0

@@ -1,0 +1,118 @@
+"""Logical->physical sharding rules for the (pod, data, model) meshes.
+
+Axis conventions (DESIGN.md §6):
+  batch axes  — ('pod', 'data') on the multi-pod mesh, ('data',) single-pod.
+  model axis  — 'model': TP for attention heads / FFN columns / vocab,
+                EP for MoE experts, SP for long-context KV sequence.
+
+All spec builders take an `Axes` so the same model code lowers on either
+mesh (and on a trivial 1-device mesh for smoke tests, where specs are
+ignored by jit on a single device).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class Axes(NamedTuple):
+    batch: Union[Tuple[str, ...], None]   # e.g. ('pod', 'data') or ('data',)
+    model: Optional[str]                  # 'model' or None
+
+
+def axes_for_mesh(mesh: Mesh) -> Axes:
+    names = mesh.axis_names
+    batch = tuple(n for n in ("pod", "data") if n in names) or None
+    model = "model" if "model" in names else None
+    return Axes(batch=batch, model=model)
+
+
+def model_shards(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def data_shards(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+# --- activation specs -------------------------------------------------------
+
+def act_bsd(ax: Axes) -> P:
+    """(batch, seq, d_model): batch over data axes, rest replicated."""
+    return P(ax.batch, None, None)
+
+
+def tokens_bs(ax: Axes) -> P:
+    return P(ax.batch, None)
+
+
+def kv_cache_spec(ax: Axes, seq_sharded: bool) -> P:
+    """KV cache (layers, batch, seq, kv_heads, head_dim).
+
+    Decode at long context shards the *sequence* dim over 'model' (SP) —
+    kv_heads is usually smaller than the model axis, sequence is not."""
+    if seq_sharded:
+        return P(None, ax.batch, ax.model, None, None)
+    return P(None, ax.batch, None, ax.model, None)
+
+
+# --- parameter specs ---------------------------------------------------------
+
+def embed_spec(ax: Axes) -> P:
+    return P(ax.model, None)            # vocab-sharded embedding
+
+
+def head_proj_spec(ax: Axes) -> P:
+    return P(None, ax.model, None)      # (d_model, heads, head_dim): TP by head
+
+
+def o_proj_spec(ax: Axes) -> P:
+    return P(ax.model, None, None)      # (heads, head_dim, d_model)
+
+
+def ffn_col_spec(ax: Axes) -> P:
+    return P(None, ax.model)            # (d_model, d_ff): column parallel
+
+
+def ffn_row_spec(ax: Axes) -> P:
+    return P(ax.model, None)            # (d_ff, d_model): row parallel
+
+
+def expert_col_spec(ax: Axes) -> P:
+    return P(ax.model, None, None)      # (E, d_model, d_ff): EP over experts
+
+
+def expert_row_spec(ax: Axes) -> P:
+    return P(ax.model, None, None)      # (E, d_ff, d_model)
+
+
+def replicated() -> P:
+    return P()
+
+
+def dsg_fw_spec(ax: Axes) -> P:
+    """f(W) buffer (k, F): F follows the FFN column sharding."""
+    return P(None, ax.model)
+
+
+def dsg_fw_expert_spec(ax: Axes) -> P:
+    return P(ax.model, None, None)      # (E, k, F): follows experts
+
+
+def with_layer_dim(spec: P) -> P:
+    """Prefix a replicated layer-stack dim (scan over layers)."""
+    return P(None, *spec)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    """Sharding constraint helper usable inside jit."""
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,61 @@
+"""Elastic scaling: re-plan the mesh after node loss / fleet resize.
+
+Policy (DESIGN.md §6): the 'model' axis is load-bearing (weights are
+sharded across it — losing a model shard loses state), so elasticity acts
+on the data axes: after losing nodes we shrink 'data' (and/or 'pod') to
+the largest supported configuration, re-shard the carried state onto the
+new mesh, and scale the per-step token budget accordingly (global batch
+follows the data axis unless the caller re-pads).
+
+This module is pure planning + re-sharding; the fleet events come from the
+scheduler (tests inject them).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.launch.mesh import make_elastic_mesh
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    n_devices: int
+    data: int
+    model: int
+    dropped: int
+
+    @property
+    def scale(self) -> float:
+        return self.data * self.model / (self.data * self.model + self.dropped)
+
+
+def plan_after_loss(available_devices: int, model: int = 16,
+                    prev_data: Optional[int] = None) -> ElasticPlan:
+    """Largest (data, model) mesh with the model axis intact."""
+    data = available_devices // model
+    if data < 1:
+        raise RuntimeError(
+            f"cannot keep model={model} with {available_devices} devices")
+    # prefer powers of two on the data axis (collective efficiency)
+    d = 1
+    while d * 2 <= data:
+        d *= 2
+    used = d * model
+    return ElasticPlan(n_devices=used, data=d, model=model,
+                       dropped=available_devices - used)
+
+
+def remesh_state(state, old_specs, plan: ElasticPlan):
+    """Re-shard a state pytree onto the degraded mesh.  Specs are reused:
+    they reference axis NAMES, which the new mesh preserves."""
+    mesh = make_elastic_mesh(plan.n_devices, plan.model)
+
+    def move(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return mesh, jax.tree.map(move, state, old_specs,
+                              is_leaf=lambda x: x is None)

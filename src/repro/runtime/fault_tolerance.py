@@ -1,0 +1,108 @@
+"""Fault-tolerance runtime: checkpoint/restart loop, straggler monitor,
+failure injection for tests.
+
+At 1000+ nodes the mean time between node failures drops below the length
+of a training run; the loop here implements the standard contract:
+  * every step is resumable: (params, dsg, opt, data cursor) all live in
+    the checkpoint; the data pipeline is a pure function of step, so
+    replaying from step k is bit-exact;
+  * failures (device loss, preemption, host OOM) surface as exceptions
+    from the step call -> restore from the newest complete checkpoint and
+    continue (bounded retries per step to avoid crash loops);
+  * a straggler monitor records per-step wall time and flags outliers
+    (> factor x rolling median) — on a real fleet this feeds the scheduler
+    (hot-swap of the slow host); here it logs and counts, and tests verify
+    detection on injected delays.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+log = logging.getLogger("repro.runtime")
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 32, factor: float = 1.5):
+        self.times = deque(maxlen=window)
+        self.factor = factor
+        self.flagged = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True if this step is a straggler."""
+        is_straggler = False
+        if len(self.times) >= 8:
+            xs = sorted(self.times)
+            median = xs[len(xs) // 2]
+            if seconds > self.factor * median:
+                self.flagged.append((step, seconds, median))
+                is_straggler = True
+                log.warning("straggler: step %d took %.3fs (median %.3fs)",
+                            step, seconds, median)
+        self.times.append(seconds)
+        return is_straggler
+
+
+@dataclass
+class FaultInjector:
+    """Deterministic failure injection for tests: raises at given steps."""
+    fail_at: tuple = ()
+    exc: type = RuntimeError
+    _fired: set = field(default_factory=set)
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self._fired:
+            self._fired.add(step)
+            raise self.exc(f"injected failure at step {step}")
+
+
+def run_with_restarts(*, step_fn: Callable, state, make_batch: Callable,
+                      ckpt, total_steps: int, start_step: int = 0,
+                      ckpt_every: int = 20, max_retries: int = 3,
+                      injector: Optional[FaultInjector] = None,
+                      on_step: Optional[Callable] = None,
+                      monitor: Optional[StragglerMonitor] = None):
+    """Fault-tolerant training loop.
+
+    step_fn(state, batch) -> (state, metrics).  ckpt: CheckpointManager.
+    Restores and replays on any exception, up to max_retries per step.
+    Returns (state, history)."""
+    monitor = monitor or StragglerMonitor()
+    history = []
+    step = start_step
+    retries = 0
+    while step < total_steps:
+        try:
+            t0 = time.time()
+            if injector is not None:
+                injector.maybe_fail(step)
+            batch = make_batch(step)
+            state, metrics = step_fn(state, batch)
+            dt = time.time() - t0
+            monitor.record(step, dt)
+            history.append({"step": step, "seconds": dt, **{
+                k: float(v) for k, v in metrics.items()}})
+            if on_step is not None:
+                on_step(step, state, metrics)
+            if ckpt is not None and (step + 1) % ckpt_every == 0:
+                ckpt.save_async(step + 1, state, meta={"step": step + 1})
+            step += 1
+            retries = 0
+        except Exception as e:                      # noqa: BLE001
+            retries += 1
+            log.error("step %d failed (%s); retry %d/%d", step, e,
+                      retries, max_retries)
+            if retries > max_retries:
+                raise
+            if ckpt is not None:
+                restored, rstep, _ = ckpt.restore(state)
+                if restored is not None:
+                    state = restored
+                    step = rstep
+                    log.info("restored from checkpoint at step %d", rstep)
+    if ckpt is not None:
+        ckpt.wait()
+    return state, history

@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch
+instantiates a REDUCED config of the same family and runs one forward +
+train step and a prefill/decode roundtrip on CPU, asserting shapes and
+finiteness.  The FULL configs are exercised only by the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import SMOKE_SHAPE, ShapeConfig
+from repro.models import api
+
+ARCHS = list(configs.ARCHS)
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = configs.get_smoke_config(arch)
+            key = jax.random.PRNGKey(0)
+            params = api.init_model(key, cfg)
+            dsg = api.init_dsg(jax.random.PRNGKey(1), params, cfg)
+            cache[arch] = (cfg, params, dsg)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_finite(arch, built):
+    cfg, params, dsg = built(arch)
+    batch = api.make_inputs(cfg, SMOKE_SHAPE, concrete=True)
+    loss, grads = jax.value_and_grad(
+        lambda p: api.train_loss(p, dsg, cfg, batch))(params)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    gnorm = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grads"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_roundtrip(arch, built):
+    cfg, params, dsg = built(arch)
+    shape = ShapeConfig("p", 16, 2, "prefill")
+    inputs = api.make_inputs(cfg, shape, concrete=True)
+    cache = api.make_cache(cfg, 2, 32)
+    logits, state = api.prefill(params, dsg, cfg, inputs, cache)
+    assert logits.shape == (2, cfg.vocab)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for i in range(3):
+        logits, state = api.decode_step(params, dsg, cfg, tok, state,
+                                        jnp.int32(16 + i))
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_dsg_off_still_works(arch, built):
+    cfg, _, _ = built(arch)
+    cfg_off = cfg.replace(dsg=cfg.dsg._replace(enabled=False))
+    params = api.init_model(jax.random.PRNGKey(0), cfg_off)
+    batch = api.make_inputs(cfg_off, SMOKE_SHAPE, concrete=True)
+    loss = api.train_loss(params, None, cfg_off, batch)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_dsg_refresh_shapes(arch, built):
+    cfg, params, dsg = built(arch)
+    if dsg is None:
+        pytest.skip("dsg disabled")
+    new = api.refresh_dsg(dsg, params, cfg)
+    for a, b in zip(jax.tree.leaves(dsg), jax.tree.leaves(new)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+def test_full_configs_match_assignment():
+    """The exact architecture numbers from the assignment sheet."""
+    c = configs.get_config("mistral-nemo-12b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == \
+        (40, 5120, 32, 8, 14336, 131072)
+    c = configs.get_config("internlm2-1.8b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == \
+        (24, 2048, 16, 8, 8192, 92544)
+    c = configs.get_config("llama3.2-3b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == \
+        (28, 3072, 24, 8, 8192, 128256)
+    c = configs.get_config("phi3-mini-3.8b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == \
+        (32, 3072, 32, 32, 8192, 32064)
+    c = configs.get_config("deepseek-moe-16b")
+    assert (c.moe_experts, c.moe_topk, c.moe_shared, c.moe_d_ff) == \
+        (64, 6, 2, 1408)
+    assert (c.n_layers, c.d_model, c.vocab) == (28, 2048, 102400)
+    c = configs.get_config("llama4-scout-17b-a16e")
+    assert (c.moe_experts, c.moe_topk) == (16, 1)
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.vocab) == \
+        (48, 5120, 40, 8, 202048)
+    c = configs.get_config("xlstm-350m")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab) == \
+        (24, 1024, 4, 50304)
+    c = configs.get_config("llava-next-34b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == \
+        (60, 7168, 56, 8, 20480, 64000)
+    c = configs.get_config("whisper-large-v3")
+    assert (c.n_layers, c.enc_layers, c.d_model, c.n_heads, c.d_ff) == \
+        (32, 32, 1280, 20, 5120)
+    c = configs.get_config("zamba2-7b")
+    assert (c.d_model, c.n_heads, c.d_ff, c.vocab, c.ssm_state) == \
+        (3584, 32, 14336, 32000, 64)

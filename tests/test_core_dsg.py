@@ -1,0 +1,196 @@
+"""Core DSG tests: projection statistics, JLL preservation, DRS selection,
+mask algebra, double-mask norm compatibility."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import double_mask, drs, masks, projection
+from repro.core import dsg_linear as dl
+
+
+# ---------------------------------------------------------------------------
+# sparse random projection (paper Eq. 5-6)
+# ---------------------------------------------------------------------------
+
+def test_projection_ternary_distribution():
+    r = projection.make_projection(jax.random.PRNGKey(0), 256, 512, s=3)
+    vals = np.unique(np.round(np.asarray(r) * np.sqrt(256), 5))
+    # {-sqrt(3), 0, +sqrt(3)} only
+    assert len(vals) == 3
+    np.testing.assert_allclose(sorted(abs(v) for v in vals)[1:],
+                               [np.sqrt(3)] * 2, rtol=1e-5)
+    zero_frac = float((np.asarray(r) == 0).mean())
+    assert 0.60 < zero_frac < 0.73          # 1 - 1/s = 2/3
+
+
+def test_jll_dim_monotone_in_eps():
+    k_tight = projection.jll_dim(4096, 1000, eps=0.3)
+    k_loose = projection.jll_dim(4096, 1000, eps=0.9)
+    assert k_tight >= k_loose
+    assert k_tight % projection.LANE == 0
+    assert k_loose >= projection.LANE
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_jll_inner_product_preservation(seed):
+    """Paper Eq. (4)/(15): |<f(x), f(w)> - <x, w>| <= eps/2 (|x|^2+|w|^2)
+    with high probability.  We check the median error over pairs is well
+    inside the bound for eps=0.5."""
+    key = jax.random.PRNGKey(seed)
+    d, n, eps = 512, 64, 0.5
+    k = projection.jll_dim(d, n, eps)
+    kx, kw, kr = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (n, d))
+    w = jax.random.normal(kw, (d, n))
+    r = projection.make_projection(kr, k, d)
+    fx = projection.project_rows(r, x)
+    fw = projection.project(r, w)
+    true = x @ w
+    approx = fx @ fw
+    bound = 0.5 * eps * (jnp.sum(x * x, -1)[:, None]
+                         + jnp.sum(w * w, 0)[None, :])
+    viol = jnp.abs(approx - true) > bound
+    assert float(viol.mean()) < 0.05        # 1 - O(eps^2) probability
+
+
+def test_norm_preservation():
+    key = jax.random.PRNGKey(3)
+    d, k = 1024, 256
+    z = jax.random.normal(key, (128, d))
+    r = projection.make_projection(jax.random.PRNGKey(4), k, d)
+    fz = projection.project_rows(r, z)
+    ratio = jnp.linalg.norm(fz, axis=-1) / jnp.linalg.norm(z, axis=-1)
+    assert float(jnp.median(jnp.abs(ratio - 1.0))) < 0.15
+
+
+# ---------------------------------------------------------------------------
+# DRS selection
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gamma", [0.25, 0.5, 0.75])
+def test_topk_mask_exact_density(gamma):
+    cfg = drs.DRSConfig(gamma=gamma, block=32, threshold_mode="topk")
+    scores = jax.random.normal(jax.random.PRNGKey(0), (64, 16))
+    mask, _ = drs.select_mask(scores, 512, cfg)
+    k = drs.keep_groups(512, cfg)
+    np.testing.assert_array_equal(np.asarray(mask.sum(-1)), k)
+
+
+def test_drs_matches_oracle_on_separated_scores():
+    """When the weight columns have very different magnitudes, DRS must
+    reproduce the oracle selection (the paper's Fig 5(c) claim)."""
+    key = jax.random.PRNGKey(1)
+    d, f, block = 512, 1024, 64
+    scales = jnp.repeat(2.0 ** jnp.arange(f // block), block)
+    w = jax.random.normal(key, (d, f)) * scales / np.sqrt(d)
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (32, d)))
+    cfg = drs.DRSConfig(gamma=0.5, block=block)
+    k = projection.jll_dim(d, f, 0.5)
+    r = projection.make_projection(jax.random.PRNGKey(3), k, d)
+    fx = projection.project_rows(r, x)
+    fw = projection.project(r, w)
+    m_drs, _ = drs.drs_mask(fx, fw, cfg)
+    m_oracle = drs.oracle_mask(x @ w, f, cfg)
+    agreement = float((m_drs == m_oracle).mean())
+    assert agreement > 0.95
+
+
+def test_shared_threshold_mode():
+    cfg = drs.DRSConfig(gamma=0.5, block=32, threshold_mode="shared")
+    scores = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    mask, _ = drs.select_mask(scores, 256, cfg)
+    # row 0 keeps exactly k groups (its own threshold)
+    assert int(mask[0].sum()) == drs.keep_groups(256, cfg)
+    assert mask.shape == scores.shape
+
+
+def test_ema_threshold_updates():
+    cfg = drs.DRSConfig(gamma=0.5, block=32, threshold_mode="ema",
+                        ema_decay=0.5)
+    scores = jnp.ones((4, 8)) * jnp.arange(8)
+    _, ema1 = drs.select_mask(scores, 256, cfg, ema_threshold=jnp.float32(0))
+    _, ema2 = drs.select_mask(scores, 256, cfg, ema_threshold=ema1)
+    assert float(ema2) > float(ema1) >= 0.0
+
+
+def test_mask_is_constant_wrt_autodiff():
+    cfg = dl.DSGConfig(enabled=True, gamma=0.5, block=64)
+    p = dl.init_swiglu(jax.random.PRNGKey(0), 128, 256)
+    state = dl.init_dsg_state(jax.random.PRNGKey(1), 128, 256, cfg,
+                              dl.search_weight(p))
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 128))
+
+    def loss(x_):
+        return jnp.sum(dl.swiglu_ffn(p, x_, state, cfg) ** 2)
+
+    g = jax.grad(loss)(x)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_backward_sparsity():
+    """Algorithm 1: gradients of dropped neuron groups are exactly zero in
+    w_down rows and gate/up columns."""
+    cfg = dl.DSGConfig(enabled=True, gamma=0.5, block=64)
+    p = dl.init_swiglu(jax.random.PRNGKey(0), 128, 256)
+    state = dl.init_dsg_state(jax.random.PRNGKey(1), 128, 256, cfg,
+                              dl.search_weight(p))
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 128))
+    mask = dl.drs_group_mask(x, state, cfg)            # (8, 4)
+    dropped_everywhere = np.where(np.asarray(mask.max(0)) == 0)[0]
+    g = jax.grad(lambda p_: jnp.sum(
+        dl.swiglu_ffn(p_, x, state, cfg) ** 2))(p)
+    gd = np.asarray(g["w_down"]).reshape(4, 64, 128)
+    for gidx in dropped_everywhere:
+        np.testing.assert_array_equal(gd[gidx], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# double-mask (paper §2.3)
+# ---------------------------------------------------------------------------
+
+def test_double_mask_restores_sparsity_after_bn():
+    key = jax.random.PRNGKey(0)
+    b, f, block = 64, 256, 32
+    x = jax.nn.relu(jax.random.normal(key, (b, f)))
+    gmask = (jax.random.uniform(jax.random.PRNGKey(1),
+                                (b, f // block)) > 0.5).astype(jnp.float32)
+    scale = jnp.ones((f,)) * 1.3
+    bias = jnp.ones((f,)) * 0.1              # shift makes zeros non-zero
+
+    def bn(z):
+        return double_mask.batch_norm_train(z, scale, bias)
+
+    single = double_mask.single_mask(bn, x, gmask, block)
+    dble = double_mask.double_mask(bn, x, gmask, block)
+    exp = np.asarray(drs.expand_mask(gmask, block))
+    # single mask: BN bias densifies the masked-out positions
+    assert (np.asarray(single)[exp == 0] != 0).mean() > 0.9
+    # double mask: fully sparse dataflow restored
+    np.testing.assert_array_equal(np.asarray(dble)[exp == 0], 0.0)
+
+
+def test_double_mask_preserves_kept_values():
+    """BN is monotone per-channel: the kept activations under the double
+    mask equal BN applied to the masked input (no distortion)."""
+    key = jax.random.PRNGKey(5)
+    b, f, block = 32, 128, 16
+    x = jax.random.normal(key, (b, f))
+    gmask = jnp.ones((b, f // block))
+
+    def bn(z):
+        return double_mask.batch_norm_train(z, jnp.ones(f), jnp.zeros(f))
+
+    out = double_mask.double_mask(bn, x, gmask, block)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(bn(x)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_mask_overhead_under_2pct():
+    """Paper §3.3: selection-mask memory overhead < 2%."""
+    shape = (64, 4096, 14336)
+    dense = int(np.prod(shape)) * 2
+    overhead = masks.mask_overhead_bytes(shape, 128)
+    assert overhead / dense < 0.02

@@ -1,0 +1,169 @@
+"""Per-kernel correctness: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode executes the kernel bodies exactly as Mosaic would)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import drs as drs_mod
+from repro.kernels import drs_search, dsg_ffn, ops, ref
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+def _mk(key, shape, dtype):
+    return jax.random.normal(key, shape).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,d,k,bm", [(64, 128, 64, 32), (256, 320, 128, 128),
+                                      (128, 512, 256, 64)])
+def test_drs_project(dtype, m, d, k, bm):
+    kx, kr = jax.random.split(jax.random.PRNGKey(0))
+    x = _mk(kx, (m, d), dtype)
+    r = _mk(kr, (k, d), dtype) / np.sqrt(k)
+    out = drs_search.drs_project(x, r, bm=bm, interpret=True)
+    want = ref.drs_project_ref(x.astype(jnp.float32),
+                               r.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out, np.float32), want,
+                               **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,f,block,bm,bf", [
+    (64, 64, 256, 32, 32, 64), (128, 128, 512, 64, 64, 128),
+    (32, 64, 1024, 128, 32, 256)])
+def test_drs_scores(dtype, m, k, f, block, bm, bf):
+    kx, kw = jax.random.split(jax.random.PRNGKey(1))
+    fx = _mk(kx, (m, k), dtype)
+    fw = _mk(kw, (k, f), dtype)
+    out = drs_search.drs_scores(fx, fw, block=block, bm=bm, bf=bf,
+                                interpret=True)
+    want = ref.drs_scores_ref(fx.astype(jnp.float32),
+                              fw.astype(jnp.float32), block)
+    np.testing.assert_allclose(np.asarray(out), want,
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 2e-4,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,d,f,block,bm,bf", [
+    (64, 96, 256, 32, 32, 64), (128, 128, 512, 64, 64, 128),
+    (64, 256, 512, 128, 64, 128)])
+def test_dsg_ffn(dtype, m, d, f, block, bm, bf):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = _mk(ks[0], (m, d), dtype)
+    wg = _mk(ks[1], (d, f), dtype) / np.sqrt(d)
+    wu = _mk(ks[2], (d, f), dtype) / np.sqrt(d)
+    wd = _mk(ks[3], (f, d), dtype) / np.sqrt(f)
+    mask = (jax.random.uniform(ks[4], (m, f // block)) > 0.4).astype(
+        jnp.float32)
+    out = dsg_ffn.dsg_ffn(x, wg, wu, wd, mask, block=block, bm=bm, bf=bf,
+                          interpret=True)
+    want = ref.dsg_ffn_ref(x.astype(jnp.float32), wg.astype(jnp.float32),
+                           wu.astype(jnp.float32), wd.astype(jnp.float32),
+                           mask, block)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(out, np.float32), want, **tol)
+
+
+def test_dsg_ffn_all_masked_is_zero():
+    m, d, f, block = 32, 64, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = _mk(ks[0], (m, d), jnp.float32)
+    wg = _mk(ks[1], (d, f), jnp.float32)
+    wu = _mk(ks[2], (d, f), jnp.float32)
+    wd = _mk(ks[3], (f, d), jnp.float32)
+    mask = jnp.zeros((m, f // block))
+    out = dsg_ffn.dsg_ffn(x, wg, wu, wd, mask, block=block, bm=32, bf=32,
+                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       mt=st.integers(1, 4), ft=st.integers(1, 4),
+       density=st.floats(0.0, 1.0))
+def test_dsg_ffn_property(seed, mt, ft, density):
+    """Property sweep: random tile counts and mask densities; kernel output
+    must equal the oracle for every configuration."""
+    block, bm, bf, d = 16, 16, 32, 48
+    m, f = mt * bm, ft * bf
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = _mk(ks[0], (m, d), jnp.float32)
+    wg = _mk(ks[1], (d, f), jnp.float32) * 0.1
+    wu = _mk(ks[2], (d, f), jnp.float32) * 0.1
+    wd = _mk(ks[3], (f, d), jnp.float32) * 0.1
+    mask = (jax.random.uniform(ks[4], (m, f // block)) < density).astype(
+        jnp.float32)
+    out = dsg_ffn.dsg_ffn(x, wg, wu, wd, mask, block=block, bm=bm, bf=bf,
+                          interpret=True)
+    want = ref.dsg_ffn_ref(x, wg, wu, wd, mask, block)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_end_to_end_kernel_path_matches_jax_path():
+    """ops.dsg_ffn_full (kernels) vs core.dsg_linear.swiglu_dsg_mask (jnp):
+    same projection state -> identical selection -> allclose outputs."""
+    from repro.core import dsg_linear as dl
+    d, f, m, block = 128, 512, 64, 64
+    cfg = dl.DSGConfig(enabled=True, gamma=0.5, block=block, eps=0.5)
+    p = dl.init_swiglu(jax.random.PRNGKey(0), d, f)
+    st_ = dl.init_dsg_state(jax.random.PRNGKey(1), d, f, cfg,
+                            dl.search_weight(p))
+    x = jax.random.normal(jax.random.PRNGKey(2), (m, d))
+    y_jax = dl.swiglu_dsg_mask(p, x, st_, cfg)
+    y_kernel = ops.dsg_ffn_full(x, p["w_gate"], p["w_up"], p["w_down"],
+                                st_["r"], st_["fw"], gamma=0.5, block=block)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_jax),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bh,s,t,d,causal,bq,bk", [
+    (4, 128, 128, 32, True, 32, 32),
+    (2, 64, 192, 64, False, 32, 64),
+    (2, 256, 256, 64, True, 128, 64),
+])
+def test_flash_attention(dtype, bh, s, t, d, causal, bq, bk):
+    from repro.kernels import flash_attention as fa
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = _mk(ks[0], (bh, s, d), dtype)
+    k = _mk(ks[1], (bh, t, d), dtype)
+    v = _mk(ks[2], (bh, t, d), dtype)
+    out = fa.flash_attention(q, k, v, causal=causal, block_q=bq,
+                             block_k=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), **tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nq=st.integers(1, 4),
+       nk=st.integers(1, 4), causal=st.booleans())
+def test_flash_attention_property(seed, nq, nk, causal):
+    from repro.kernels import flash_attention as fa
+    bq = bk = 16
+    d, bh = 16, 2
+    s, t = nq * bq, nk * bk
+    if causal and t < s:
+        t = s
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = _mk(ks[0], (bh, s, d), jnp.float32)
+    k = _mk(ks[1], (bh, t, d), jnp.float32)
+    v = _mk(ks[2], (bh, t, d), jnp.float32)
+    out = fa.flash_attention(q, k, v, causal=causal, block_q=bq,
+                             block_k=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)

@@ -1,0 +1,284 @@
+"""Substrate tests: optimizer, gradient compression, data pipeline,
+checkpointing, fault tolerance, elastic planning, sharding specs."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.ckpt.manager import CheckpointManager
+from repro.data import synthetic
+from repro.models import api, specs
+from repro.optim import adamw, compress
+from repro.parallel.sharding import Axes
+from repro.runtime.elastic import plan_after_loss
+from repro.runtime.fault_tolerance import (FaultInjector, StragglerMonitor,
+                                           run_with_restarts)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_on_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup=1,
+                            total_steps=200, schedule="const")
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    opt = adamw.init_opt(params, use_master=False)
+    target = jnp.array([1.0, 1.0, 1.0])
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, opt, _ = adamw.apply_updates(params, g, opt, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_grad_clipping():
+    cfg = adamw.AdamWConfig(clip_norm=1.0, warmup=1)
+    params = {"w": jnp.zeros(4)}
+    opt = adamw.init_opt(params, False)
+    _, _, m = adamw.apply_updates(params, {"w": jnp.full(4, 100.0)}, opt, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_lr_schedule_shapes():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup=10, total_steps=100,
+                            schedule="cosine")
+    assert float(adamw.lr_at(cfg, 0)) < 0.2
+    assert float(adamw.lr_at(cfg, 10)) == pytest.approx(1.0, abs=0.05)
+    assert float(adamw.lr_at(cfg, 100)) < 0.01
+
+
+def test_master_weights_bf16():
+    params = {"w": jnp.ones(8, jnp.bfloat16)}
+    opt = adamw.init_opt(params, use_master=True)
+    assert opt["master"]["w"].dtype == jnp.float32
+    cfg = adamw.AdamWConfig(lr=1e-3, warmup=1)
+    g = {"w": jnp.full(8, 1e-4, jnp.bfloat16)}
+    # tiny updates accumulate in fp32 master even when bf16 can't express
+    for _ in range(10):
+        params, opt, _ = adamw.apply_updates(params, g, opt, cfg)
+    assert float(jnp.abs(opt["master"]["w"] - 1.0).max()) > 0
+    assert params["w"].dtype == jnp.bfloat16
+
+
+def test_zero1_specs_add_data_axis():
+    from jax.sharding import PartitionSpec as P
+    ps = {"a": P(None, "model"), "b": P()}
+    params = {"a": jnp.zeros((32, 64)), "b": jnp.zeros((7,))}
+    zs = adamw.zero1_specs(ps, params)
+    assert zs["a"] == P("data", "model")
+    assert zs["b"] == P()          # 7 not divisible -> untouched
+
+
+# ---------------------------------------------------------------------------
+# ternary gradient compression (beyond-paper §7.3)
+# ---------------------------------------------------------------------------
+
+def test_ternarize_codes():
+    g = jnp.array([3.0, -2.5, 0.01, 0.0, 5.0])
+    codes, scale = compress.ternarize(g)
+    assert set(np.unique(np.asarray(codes))) <= {-1.0, 0.0, 1.0}
+    assert float(scale) > 0
+
+
+def test_error_feedback_telescopes():
+    """sum of decoded over steps -> sum of raw gradients (error feedback
+    makes compression lossless in the telescoping sum)."""
+    key = jax.random.PRNGKey(0)
+    gs = jax.random.normal(key, (50, 64))
+    err = jnp.zeros(64)
+    decoded_sum = jnp.zeros(64)
+    for i in range(50):
+        dec, err = compress.compress_with_feedback(gs[i], err)
+        decoded_sum += dec
+    true_sum = gs.sum(0)
+    # residual equals the final error buffer exactly
+    np.testing.assert_allclose(np.asarray(true_sum - decoded_sum),
+                               np.asarray(err), rtol=1e-4, atol=1e-4)
+
+
+def test_compressed_sgd_converges():
+    w = jnp.array([4.0, -4.0])
+    err = jnp.zeros(2)
+    for _ in range(300):
+        g = 2 * w
+        dec, err = compress.compress_with_feedback(g, err)
+        w = w - 0.05 * dec
+    assert float(jnp.abs(w).max()) < 0.1
+
+
+def test_wire_bytes_reduction():
+    g = jnp.zeros(1024)
+    assert compress.wire_bytes(g) < g.size * 4 / 10
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic():
+    a = synthetic.batch_at(7, global_batch=4, seq_len=16, vocab=100)
+    b = synthetic.batch_at(7, global_batch=4, seq_len=16, vocab=100)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+
+
+def test_data_labels_are_shifted():
+    b = synthetic.batch_at(0, global_batch=2, seq_len=32, vocab=50)
+    assert b["tokens"].shape == (2, 32) and b["labels"].shape == (2, 32)
+
+
+def test_data_hosts_disjoint():
+    h0 = synthetic.batch_at(3, global_batch=8, seq_len=16, vocab=1000,
+                            host_index=0, host_count=2)
+    h1 = synthetic.batch_at(3, global_batch=8, seq_len=16, vocab=1000,
+                            host_index=1, host_count=2)
+    assert h0["tokens"].shape == (4, 16)
+    assert not np.array_equal(np.asarray(h0["tokens"]),
+                              np.asarray(h1["tokens"]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(step=st.integers(0, 1000), seed=st.integers(0, 100))
+def test_data_in_vocab(step, seed):
+    b = synthetic.batch_at(step, global_batch=2, seq_len=8, vocab=37,
+                           seed=seed)
+    assert int(b["tokens"].max()) < 37 and int(b["tokens"].min()) >= 0
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "opt": {"step": jnp.int32(5), "m": [jnp.ones(4)]}}
+
+
+def test_ckpt_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree()
+    mgr.save(10, t, meta={"note": "x"})
+    restored, step, meta = mgr.restore(t)
+    assert step == 10 and meta["note"] == "x"
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  np.asarray(t["params"]["w"]))
+
+
+def test_ckpt_latest_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, t)
+    assert mgr.latest_step() == 4
+    assert mgr.steps() == [3, 4]
+
+
+def test_ckpt_ignores_partial_writes(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree()
+    mgr.save(1, t)
+    os.makedirs(tmp_path / "step_2.tmp")        # simulated crash mid-write
+    (tmp_path / "step_2.tmp" / "arrays.npz").write_bytes(b"garbage")
+    assert mgr.latest_step() == 1
+
+
+def test_ckpt_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    bad = _tree()
+    bad["params"]["w"] = jnp.zeros((3, 3))
+    with pytest.raises(ValueError):
+        mgr.restore(bad)
+
+
+def test_ckpt_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_async(7, _tree())
+    mgr.wait()
+    assert mgr.latest_step() == 7
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance / stragglers / elastic
+# ---------------------------------------------------------------------------
+
+def test_run_with_restarts_recovers(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = {"x": jnp.float32(0.0)}
+
+    def step_fn(st, batch):
+        return {"x": st["x"] + 1.0}, {"loss": st["x"]}
+
+    injector = FaultInjector(fail_at=(7, 13))
+    state, hist = run_with_restarts(
+        step_fn=step_fn, state=state, make_batch=lambda s: None,
+        ckpt=mgr, total_steps=20, ckpt_every=5, injector=injector)
+    assert float(state["x"]) == 20.0           # replay is exact
+    assert len(hist) >= 20
+
+
+def test_run_with_restarts_gives_up():
+    def bad(st, batch):
+        raise RuntimeError("always")
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(step_fn=bad, state={}, make_batch=lambda s: None,
+                          ckpt=None, total_steps=3, max_retries=2)
+
+
+def test_straggler_detection():
+    mon = StragglerMonitor(window=16, factor=1.5)
+    for i in range(10):
+        mon.record(i, 1.0)
+    assert mon.record(10, 2.0) is True
+    assert mon.record(11, 1.05) is False
+    assert len(mon.flagged) == 1
+
+
+def test_elastic_plan():
+    p = plan_after_loss(512 - 16, model=16)    # lost one 16-chip host
+    assert p.model == 16 and p.data == 16 and p.n_devices == 256
+    p2 = plan_after_loss(300, model=16)
+    assert p2.data == 16
+    with pytest.raises(RuntimeError):
+        plan_after_loss(8, model=16)
+
+
+# ---------------------------------------------------------------------------
+# sharding specs: static divisibility audit for every arch x mesh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", list(configs.ARCHS))
+@pytest.mark.parametrize("axes,n_model,sizes", [
+    (Axes(batch=("data",), model="model"), 16, {"data": 16, "model": 16}),
+    (Axes(batch=("pod", "data"), model="model"), 16,
+     {"pod": 2, "data": 16, "model": 16}),
+])
+def test_param_specs_divisible(arch, axes, n_model, sizes):
+    """Every sharded dim of every parameter divides its mesh axis — the
+    static proof that the full configs lower on the production meshes."""
+    cfg = configs.get_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda: api.init_model(key, cfg))
+    pspecs = specs.param_specs(params, cfg, axes, n_model)
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_s = jax.tree.leaves(pspecs, is_leaf=lambda x: hasattr(x, "index"))
+    assert len(flat_p) == len(flat_s)
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        entries = tuple(spec)
+        for dim_idx, entry in enumerate(entries):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            total = 1
+            for n in names:
+                total *= sizes[n]
+            assert leaf.shape[dim_idx] % total == 0, (
+                f"{arch}: {path} dim {dim_idx} ({leaf.shape}) not divisible "
+                f"by {total} ({spec})")
