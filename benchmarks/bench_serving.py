@@ -1,0 +1,81 @@
+"""Serving benchmark: wave vs overlap admission on mixed-length traffic.
+
+The wave baseline admits only when every lane has drained (the seed
+engine's policy); overlap admission splices each new prompt's KV pages into
+any freed lane while the other lanes keep decoding.  On mixed-length
+traffic (prompts 8-192, generation budgets 8-64, n_slots=4) the wave engine
+strands lanes behind the longest request of each wave, so overlap wins on
+both throughput and tail latency.
+
+  PYTHONPATH=src python benchmarks/bench_serving.py --requests 48
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import api
+from repro.serving.workload import mixed_requests, run_workload
+
+
+def run(args) -> dict:
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    key = jax.random.PRNGKey(0)
+    params = api.init_model(key, cfg)
+    dsg = api.init_dsg(jax.random.fold_in(key, 1), params, cfg)
+
+    results = {}
+    for admission in ("wave", "overlap"):
+        best = None
+        for _ in range(args.repeats):
+            # identical traffic for both policies (fresh Request objects)
+            reqs = mixed_requests(
+                cfg.vocab, args.requests, seed=args.seed,
+                prompt_range=(args.prompt_min, args.prompt_max),
+                max_new_range=(args.gen_min, args.gen_max))
+            st = run_workload(
+                cfg, params, dsg, reqs, admission=admission,
+                n_slots=args.slots, max_seq=args.max_seq,
+                prompt_bucket=args.prompt_bucket)
+            if best is None or st["tok_per_s"] > best["tok_per_s"]:
+                best = st      # best-of-N: washes out host timing noise
+        results[admission] = best
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false",
+                    help="use the full-size config (needs accelerators)")
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-min", type=int, default=8)
+    ap.add_argument("--prompt-max", type=int, default=192)
+    ap.add_argument("--gen-min", type=int, default=8)
+    ap.add_argument("--gen-max", type=int, default=64)
+    ap.add_argument("--max-seq", type=int, default=384)
+    ap.add_argument("--prompt-bucket", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    results = run(args)
+    print(f"{'policy':>8} {'tok/s':>9} {'p50 s':>7} {'p95 s':>7} "
+          f"{'steps':>6} {'tokens':>7}")
+    for name, st in results.items():
+        print(f"{name:>8} {st['tok_per_s']:>9.1f} {st['p50_s']:>7.2f} "
+              f"{st['p95_s']:>7.2f} {st['steps']:>6d} {st['tokens']:>7d}")
+    speedup = results["overlap"]["tok_per_s"] / results["wave"]["tok_per_s"]
+    print(f"overlap / wave throughput: {speedup:.2f}x")
+    assert results["overlap"]["tokens"] == results["wave"]["tokens"], \
+        "policies must generate identical token counts on identical traffic"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point (local + CI).
+#
+#   scripts/run_tests.sh            # whole suite
+#   scripts/run_tests.sh tests/test_serving.py -k eos   # pass-through args
+#
+# Forces the CPU platform with 8 virtual host devices so the multi-device
+# shard_map/pipeline tests exercise real collectives; subprocess tests that
+# need a different device count set their own XLA_FLAGS.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+
+if ! python -c "import hypothesis" >/dev/null 2>&1; then
+  pip install -q -r requirements-dev.txt \
+    || echo "warning: could not install requirements-dev.txt (offline?);" \
+            "hypothesis-based modules will be skipped"
+fi
+
+exec python -m pytest -q "$@"

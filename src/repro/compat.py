@@ -1,0 +1,56 @@
+"""JAX version-compatibility shims.
+
+The repo targets the moving jax_pallas toolchain, but the API surface for
+explicit meshes and shard_map has drifted across JAX releases:
+
+  * ``jax.sharding.AxisType`` and the ``axis_types=`` kwarg of
+    ``jax.make_mesh`` only exist on newer JAX (>= 0.5 era); on 0.4.x the
+    mesh is implicitly all-Auto.
+  * ``jax.shard_map`` was promoted out of ``jax.experimental.shard_map``
+    and its replication-check kwarg renamed ``check_rep`` -> ``check_vma``.
+
+Everything in the repo goes through these two wrappers instead of calling
+the drifting APIs directly, so a single JAX pin change never fans out.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # newer JAX: explicit axis types
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # 0.4.x: meshes are implicitly Auto
+    _AxisType = None
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with all-Auto axis types where supported."""
+    if _AxisType is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=(_AxisType.Auto,) * len(axis_names),
+                                 devices=devices)
+        except TypeError:
+            pass  # AxisType exists but make_mesh predates axis_types=
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """shard_map with replication/VMA checking disabled, any JAX version.
+
+    All call sites in this repo run with checking off (the collectives are
+    validated by numeric tests against sequential references instead).
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:  # promoted API but pre-rename kwarg
+            try:
+                return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, check_rep=False)
+            except TypeError:  # kwarg gone entirely
+                return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)

@@ -7,11 +7,8 @@ XLA_FLAGS before the first jax initialization.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
-
-def _auto(n):
-    return (AxisType.Auto,) * n
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,12 +16,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh():
     """1-device mesh for smoke tests."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def make_elastic_mesh(n_devices: int, model: int = 16):
@@ -34,5 +31,4 @@ def make_elastic_mesh(n_devices: int, model: int = 16):
     if data < 1:
         raise ValueError(f"need >= {model} devices, have {n_devices}")
     devs = jax.devices()[: data * model]
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2), devices=devs)
+    return make_mesh((data, model), ("data", "model"), devices=devs)

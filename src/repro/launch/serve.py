@@ -2,12 +2,19 @@
 
 The paper extends DSG to inference by keeping the on-the-fly
 dimension-reduction search (Appendix C: stored per-sample masks would cost
-more memory than they save, so the search stays online).  This driver
-demonstrates: batched prompt prefill -> KV cache -> token-by-token decode,
-with the same DSG masks applied in both phases.
+more memory than they save, so the search stays online).  Two workloads:
+
+  * --workload batch (default): one fixed-shape batch — batched prompt
+    prefill -> KV cache -> token-by-token decode, same DSG masks in both
+    phases.
+  * --workload mixed: continuous batching over mixed-length synthetic
+    traffic through the overlap-admission ServingEngine (prompts and
+    generation budgets drawn per request; per-slot admission/retirement).
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
       --smoke --batch 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+      --smoke --workload mixed --requests 16 --slots 4 --admission overlap
 """
 from __future__ import annotations
 
@@ -58,10 +65,20 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--workload", choices=("batch", "mixed"),
+                    default="batch")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--no-dsg", action="store_true")
+    # mixed-workload knobs
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=384)
+    ap.add_argument("--prompt-bucket", type=int, default=256)
+    ap.add_argument("--admission", choices=("overlap", "wave"),
+                    default="overlap")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
@@ -71,6 +88,20 @@ def main():
     key = jax.random.PRNGKey(0)
     params = api.init_model(key, cfg)
     dsg = api.init_dsg(jax.random.fold_in(key, 1), params, cfg)
+
+    if args.workload == "mixed":
+        from repro.serving.workload import mixed_requests, run_workload
+        reqs = mixed_requests(cfg.vocab, args.requests, seed=args.seed)
+        stats = run_workload(cfg, params, dsg, reqs,
+                             admission=args.admission, n_slots=args.slots,
+                             max_seq=args.max_seq,
+                             prompt_bucket=args.prompt_bucket)
+        print(f"[{stats['admission']}] {stats['requests']} requests, "
+              f"{stats['tokens']} tokens in {stats['wall_s']:.2f}s = "
+              f"{stats['tok_per_s']:.1f} tok/s; latency "
+              f"p50 {stats['p50_s']:.2f}s p95 {stats['p95_s']:.2f}s "
+              f"({stats['steps']} decode steps)")
+        return
 
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab,

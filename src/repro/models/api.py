@@ -134,6 +134,46 @@ def decode_step(params, dsg, cfg: ModelConfig, token, state, pos,
 
 
 # ---------------------------------------------------------------------------
+# per-slot cache surgery (overlap-admission continuous batching)
+# ---------------------------------------------------------------------------
+#
+# The serving engine admits one prompt at a time into a live batched cache:
+# the prompt is prefilled against a throwaway 1-lane cache and its K/V pages
+# (plus implicit position state: everything below the prompt length) are
+# scattered into lane `slot` of the engine cache while the other lanes keep
+# decoding.  These helpers assume the KV-cache layout of the decoder
+# families — every cache leaf carries the batch on axis 1 (L, B, ...) — which
+# holds for transformer and encdec caches; recurrent families (xlstm/zamba)
+# keep per-lane state elsewhere and are not served by the slot engine yet.
+
+def make_slot_cache(cfg: ModelConfig, max_seq: int, dtype=None):
+    """A 1-lane cache for solo prompt prefill (same Smax as the engine
+    cache, so a lane-to-lane scatter lines up exactly)."""
+    return make_cache(cfg, 1, max_seq, dtype)
+
+
+def prefill_slot(params, dsg, cfg: ModelConfig, tokens, lane_cache,
+                 mesh=None, batch_axes=None):
+    """Prefill a single prompt lane.  tokens (1, P) int32 ->
+    (last_logits (1, V), filled 1-lane cache)."""
+    return prefill(params, dsg, cfg, {"tokens": tokens}, lane_cache,
+                   mesh=mesh, batch_axes=batch_axes)
+
+
+def merge_slot_cache(cache, lane_cache, slot):
+    """Scatter a 1-lane cache into lane `slot` of the batched cache.
+
+    Writes the FULL sequence extent of the lane (not just the prompt), so
+    stale K/V left behind by a retired request can never leak into the new
+    occupant's attention window.  `slot` may be a traced scalar (the helper
+    is jit-friendly; the engine jits it once)."""
+    def upd(c, lane):
+        start = (0, slot) + (0,) * (c.ndim - 2)
+        return jax.lax.dynamic_update_slice(c, lane.astype(c.dtype), start)
+    return jax.tree.map(upd, cache, lane_cache)
+
+
+# ---------------------------------------------------------------------------
 # input construction (ShapeDtypeStructs for dry-run, arrays for smoke tests)
 # ---------------------------------------------------------------------------
 

@@ -48,11 +48,14 @@ def init_attention(key: jax.Array, d: int, n_heads: int, n_kv: int,
 
 def _mask(q_pos: jax.Array, kv_pos: jax.Array, causal: bool,
           window: int) -> jax.Array:
-    """(S, T) boolean validity mask from absolute positions."""
-    qp = q_pos[:, None]
+    """Boolean validity mask from absolute positions.
+
+    q_pos (S,) -> (S, T); per-lane q_pos (B, S) -> (B, S, T) (continuous
+    batching: each lane decodes at its own position)."""
+    qp = q_pos[..., :, None]
     kp = kv_pos[None, :]
-    m = kp >= 0                       # ring-buffer slots not yet written
-    m = jnp.broadcast_to(m, (q_pos.shape[0], kv_pos.shape[0]))
+    shape = jnp.broadcast_shapes(qp.shape, kp.shape)
+    m = jnp.broadcast_to(kp >= 0, shape)   # ring-buffer slots not yet written
     if causal:
         m = m & (kp <= qp)
     if window > 0:
@@ -81,10 +84,12 @@ def attend_direct(q: jax.Array, k: jax.Array, v: jax.Array,
     d = q.shape[-1]
     scale = 1.0 / math.sqrt(d)
     m = _mask(q_pos, kv_pos, causal, window)
+    # (S,T) masks broadcast over (B,H); per-lane (B,S,T) masks over H only
+    m = m[:, None] if m.ndim == 3 else m[None, None]
     if bf16_scores and q.dtype == jnp.bfloat16:
         s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
                        preferred_element_type=jnp.bfloat16) * scale
-        s = jnp.where(m[None, None], s, jnp.bfloat16(NEG))
+        s = jnp.where(m, s, jnp.bfloat16(NEG))
         mx = jnp.max(s.astype(jnp.float32), axis=-1, keepdims=True)
         p = jnp.exp(s.astype(jnp.float32) - mx)
         p = (p / jnp.sum(p, axis=-1, keepdims=True)).astype(jnp.bfloat16)
@@ -92,7 +97,7 @@ def attend_direct(q: jax.Array, k: jax.Array, v: jax.Array,
         return o.astype(q.dtype)
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
-    s = jnp.where(m[None, None], s, NEG)
+    s = jnp.where(m, s, NEG)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
     return o.astype(q.dtype)
@@ -172,8 +177,10 @@ def self_attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
 
     Training / prefill: cache=None -> returns (out, new_kv) where new_kv is
     the (B, S, Kv, D) tensors (prefill stores them into the cache).
-    Decode: cache={'k','v'} of (B, Smax, Kv, D), cache_pos = scalar write
-    position (ring-buffer slot for windowed caches), cache_kv_pos = absolute
+    Decode: cache={'k','v'} of (B, Smax, Kv, D), cache_pos = write position
+    (ring-buffer slot for windowed caches) — a scalar shared by the batch,
+    or a per-lane (B,) vector for continuous batching where every slot sits
+    at its own depth (q_pos is then (B, S)).  cache_kv_pos = absolute
     positions held by each cache slot (defaults to arange(Smax)) -> returns
     (out, updated_cache).
     """
@@ -181,13 +188,22 @@ def self_attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
-    q = apply_rope(q, q_pos[None, :], rope_theta) if rope_theta > 0 else q
-    k_new = (apply_rope(k_new, q_pos[None, :], rope_theta)
+    rope_pos = q_pos if q_pos.ndim == 2 else q_pos[None, :]
+    q = apply_rope(q, rope_pos, rope_theta) if rope_theta > 0 else q
+    k_new = (apply_rope(k_new, rope_pos, rope_theta)
              if rope_theta > 0 else k_new)
 
     if cache is None:
         k, v = k_new, v_new
         kv_pos = q_pos
+    elif jnp.ndim(cache_pos) == 1:
+        # per-lane scatter: lane i writes its tokens at its own position
+        upd = jax.vmap(
+            lambda c, n, pp: jax.lax.dynamic_update_slice(c, n, (pp, 0, 0)))
+        k = upd(cache["k"], k_new.astype(cache["k"].dtype), cache_pos)
+        v = upd(cache["v"], v_new.astype(cache["v"].dtype), cache_pos)
+        kv_pos = (cache_kv_pos if cache_kv_pos is not None
+                  else jnp.arange(k.shape[1]))
     else:
         k = jax.lax.dynamic_update_slice(
             cache["k"], k_new.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
@@ -221,7 +237,9 @@ def self_attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
             kf = pctx.constrain(kf, ba, None, None, None)
             vf = pctx.constrain(vf, ba, None, None, None)
 
-    if s * kf.shape[1] > CHUNK_THRESHOLD:
+    # chunked path only handles batch-shared positions; per-lane decode
+    # (q_pos 2-D) is always tiny (s == 1) and never needs it
+    if s * kf.shape[1] > CHUNK_THRESHOLD and q_pos.ndim == 1:
         o = attend_chunked(q, kf, vf, q_pos, kv_pos, causal, window,
                            q_spec=q_spec)
     else:

@@ -177,12 +177,18 @@ def forward(params: dict, dsg: Optional[dict], cfg: ModelConfig,
 
     prefix_embeds (B, P, d): VLM stub patch embeddings, prepended.
     cache: stacked per-layer KV {'k': (L,B,Smax,Kv,D), 'v': ...} for decode.
+    pos0: scalar start position, or a per-lane (B,) vector for continuous
+    batching (each batch lane decodes at its own depth).
     """
     x = params["embed"].astype(_dtype(cfg))[tokens]
     if prefix_embeds is not None:
         x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
     s = x.shape[1]
-    q_pos = pos0 + jnp.arange(s)
+    pos0 = jnp.asarray(pos0)
+    if pos0.ndim == 1:
+        q_pos = pos0[:, None] + jnp.arange(s)      # (B, S) per-lane
+    else:
+        q_pos = pos0 + jnp.arange(s)               # (S,)
 
     r = dsg["r"] if dsg is not None else None
     dsg_stack = _layer_dsg(dsg, cfg)
@@ -251,7 +257,8 @@ def prefill(params, dsg, cfg: ModelConfig, tokens, cache,
 
 def decode_step(params, dsg, cfg: ModelConfig, token, cache, pos,
                 mesh=None, batch_axes=None):
-    """One decode step.  token (B, 1), pos scalar -> (logits (B, V), cache)."""
+    """One decode step.  token (B, 1), pos scalar or per-lane (B,) vector
+    -> (logits (B, V), cache)."""
     logits, new_cache, _ = forward(params, dsg, cfg, token, cache=cache,
                                    pos0=pos, mesh=mesh,
                                    batch_axes=batch_axes)

@@ -1,11 +1,21 @@
-"""Continuous-batching serving scheduler.
+"""Continuous-batching serving scheduler with overlap admission.
 
 Fixed-slot continuous batching (vLLM-style, static shapes for XLA): the
-engine keeps `n_slots` decode lanes; finished/empty lanes are refilled
-from the request queue each step, the decode step always runs the full
-(padded) batch, and per-slot position counters + EOS/length checks retire
-sequences.  Prefill is per-admission (one jit'd prefill per prompt shape
-bucket); the KV cache is written in-place per slot via the batched cache.
+engine keeps `n_slots` decode lanes and admits a new prompt into ANY free
+lane on ANY step — per-slot KV-cache surgery (api.prefill_slot +
+api.merge_slot_cache) prefills the prompt against a throwaway 1-lane cache
+and scatters its K/V pages into the freed lane while the other lanes keep
+decoding.  Per-slot position counters stay honest (the decode step takes a
+per-lane position vector), retirement is per-slot on EOS-after-emit /
+max_new / max_seq, and retired lanes are masked out of sampling.
+
+Prompt lengths are bucketed (DEFAULT_BUCKETS, capped at `prompt_bucket`)
+so admission compiles one prefill per bucket — a small fixed set of
+shapes; the decode step compiles exactly once.
+
+`admission="wave"` preserves the old drain-then-refill policy (admit only
+when every lane is free) as a benchmark baseline — bench_serving.py
+measures the overlap speedup against it on mixed-length traffic.
 
 This is the single-host engine; at pod scale the same slot logic runs
 per data-parallel replica group with the model sharded over 'model'
@@ -16,13 +26,15 @@ from __future__ import annotations
 import collections
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api
+
+DEFAULT_BUCKETS = (16, 32, 64, 96, 128, 192, 256)
 
 
 @dataclass
@@ -50,33 +62,66 @@ class _Slot:
 class ServingEngine:
     """Continuous batching over a fixed slot count.
 
-    Static-shape discipline: prompts are right-aligned into a fixed
-    `prompt_bucket` window (shorter prompts left-padded and positions
-    offset), so there is exactly ONE prefill computation and ONE decode
-    computation to compile.
+    Static-shape discipline: a prompt is right-aligned into the smallest
+    length bucket that holds it (shorter prompts left-padded), so there is
+    one prefill computation per bucket and ONE decode computation to
+    compile.  Each admission runs a 1-lane prefill and splices the result
+    into the live batched cache — active lanes' K/V bytes are never
+    touched, and under per-row DRS selection (threshold_mode="topk")
+    their outputs are bit-identical to a solo run (see
+    tests/test_serving_overlap.py).  With the paper's inter-sample
+    threshold sharing (threshold_mode="shared") all lanes couple to batch
+    row 0's scores by design; the engine keeps that row meaningful by
+    mirroring idle lanes onto an active one.
     """
 
     def __init__(self, cfg, params, dsg, *, n_slots: int = 4,
-                 max_seq: int = 256, prompt_bucket: int = 64):
+                 max_seq: int = 256, prompt_bucket: int = 64,
+                 buckets: Optional[Sequence[int]] = None,
+                 admission: str = "overlap"):
+        if admission not in ("overlap", "wave"):
+            raise ValueError(f"unknown admission policy {admission!r}")
         self.cfg = cfg
         self.params = params
         self.dsg = dsg
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.prompt_bucket = min(prompt_bucket, max_seq)
+        bs = buckets if buckets is not None else DEFAULT_BUCKETS
+        self.buckets = tuple(sorted({min(b, self.prompt_bucket) for b in bs}))
+        self.admission = admission
         self.queue: collections.deque = collections.deque()
         self.slots = [_Slot() for _ in range(n_slots)]
         self.done: Dict[int, Request] = {}
         self.steps = 0
 
         self.cache = api.make_cache(cfg, n_slots, max_seq)
-        self._state = None            # engine-wide decode state
+        # zero 1-lane template reused by every admission (prefill is
+        # functional: the template is never mutated, and its zero tail
+        # wipes any stale K/V when merged over a retired lane)
+        self._lane0 = api.make_slot_cache(cfg, max_seq)
+        # token each lane feeds to its next decode step (argmax of the
+        # lane's latest logits; junk for free lanes, masked at emit time)
+        self._next_tok = np.zeros(n_slots, np.int32)
 
-        self._jit_decode = jax.jit(
-            lambda p, d, tok, st, pos: api.decode_step(p, d, cfg, tok, st,
-                                                       pos))
-        self._jit_prefill = jax.jit(
-            lambda p, d, inp, c: api.prefill(p, d, cfg, inp, c))
+        # greedy sampling is fused into the jitted steps so decode and
+        # admission are each a single device dispatch (the tiny-model
+        # regime is dispatch-bound; see bench_serving.py)
+        def _decode(p, d, tok, c, pos):
+            logits, c = api.decode_step(p, d, cfg, tok, c, pos)
+            return jnp.argmax(logits, -1).astype(jnp.int32), c
+
+        def _admit_one(p, d, toks, lane0, c, slot):
+            logits, lane = api.prefill_slot(p, d, cfg, toks, lane0)
+            tok = jnp.argmax(logits[0]).astype(jnp.int32)
+            return tok, api.merge_slot_cache(c, lane, slot)
+
+        # the engine cache is donated: the caller always rebinds
+        # self.cache to the result, and donation lets XLA update one
+        # lane / one token column in place instead of copying the whole
+        # (L, n_slots, Smax, Kv, D) cache every call
+        self._jit_decode = jax.jit(_decode, donate_argnums=(3,))
+        self._jit_admit = jax.jit(_admit_one, donate_argnums=(4,))
 
     # -- public API ---------------------------------------------------------
 
@@ -90,64 +135,71 @@ class ServingEngine:
             self.step()
         return self.done
 
-    # -- engine internals -----------------------------------------------------
+    # -- engine internals ---------------------------------------------------
+
+    def _bucket_for(self, prompt_len: int) -> int:
+        for b in self.buckets:
+            if prompt_len <= b:
+                return b
+        return self.buckets[-1]      # longer prompts truncate to max bucket
 
     def _admit(self):
-        """Fill free slots from the queue (batched prefill for the new
-        admissions).  Prompts are truncated/left-padded to prompt_bucket."""
-        new = []
-        for i, slot in enumerate(self.slots):
-            if slot.free and self.queue:
-                slot.req = self.queue.popleft()
-                slot.pos = 0
-                new.append(i)
-        if not new:
+        """Admit queued prompts into free lanes via per-slot cache surgery.
+
+        Overlap policy: every free lane refills immediately.  Wave policy:
+        admission waits until ALL lanes have drained (the old baseline)."""
+        if self.admission == "wave" and any(not s.free for s in self.slots):
             return
-        pb = self.prompt_bucket
-        toks = np.zeros((self.n_slots, pb), np.int32)
         for i, slot in enumerate(self.slots):
-            if slot.req is not None and slot.pos == 0:
-                pr = slot.req.prompt[-pb:]
-                toks[i, pb - len(pr):] = pr
-        logits, state = self._jit_prefill(self.params, self.dsg,
-                                          {"tokens": jnp.asarray(toks)},
-                                          self.cache)
-        # engine state is shared across slots (batched cache); admissions
-        # reset everyone's cache content, so we only admit in waves when
-        # ALL slots are free or at t=0.  (Fixed-wave variant; per-slot
-        # cache surgery is the TODO for overlap-admission.)
-        self._state = state
-        self._last_logits = logits
-        for slot in self.slots:
-            if slot.req is not None:
-                slot.pos = pb
+            if not slot.free or not self.queue:
+                continue
+            req = self.queue.popleft()
+            pb = self._bucket_for(len(req.prompt))
+            toks = np.zeros((1, pb), np.int32)
+            pr = req.prompt[-pb:]
+            toks[0, pb - len(pr):] = pr
+            tok, self.cache = self._jit_admit(self.params, self.dsg,
+                                              jnp.asarray(toks), self._lane0,
+                                              self.cache, i)
+            slot.req = req
+            slot.pos = pb
+            self._next_tok[i] = int(tok)
 
     def step(self):
-        # wave admission: only when no active slot holds a sequence
-        if all(s.free or s.pos == 0 for s in self.slots):
-            self._admit()
-        if self._state is None:
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if not s.free]
+        if not active:
             return
-        # sample greedily per slot, decode one step for the whole batch
-        tok = np.asarray(jnp.argmax(self._last_logits, -1), np.int32)
-        pos = max(s.pos for s in self.slots if not s.free)
-        for i, slot in enumerate(self.slots):
-            if not slot.free:
-                slot.req.output.append(int(tok[i]))
-        logits, self._state = self._jit_decode(
+        # Free/retired lanes mirror the first active lane instead of feeding
+        # an arbitrary pad token: with the paper's inter-sample threshold
+        # sharing (DRS threshold_mode="shared", taken from batch row 0) an
+        # idle lane 0 would otherwise drive every live lane's sparsity mask
+        # with junk.  Mirrored lanes emit nothing and their K/V scribbles
+        # are wiped by the full-lane merge on the next admission.
+        donor = active[0]
+        tok = np.array(self._next_tok, np.int32)
+        pos = np.empty(self.n_slots, np.int32)
+        for i, s in enumerate(self.slots):
+            if s.free:
+                tok[i] = self._next_tok[donor]
+                pos[i] = self.slots[donor].pos
+            else:
+                pos[i] = s.pos
+        for i in active:
+            self.slots[i].req.output.append(int(tok[i]))
+        next_tok, self.cache = self._jit_decode(
             self.params, self.dsg, jnp.asarray(tok)[:, None],
-            self._state, jnp.int32(pos))
-        self._last_logits = logits
+            self.cache, jnp.asarray(pos))
+        self._next_tok = np.array(next_tok, np.int32)
         self.steps += 1
-        # retire finished sequences
-        for slot in self.slots:
-            if slot.free:
-                continue
-            slot.pos = pos + 1
+        # per-slot retirement — AFTER the EOS token has been emitted, so a
+        # stop token always appears in the output it terminates
+        for i in active:
+            slot = self.slots[i]
+            slot.pos += 1
             r = slot.req
-            hit_eos = r.eos_id is not None and r.output \
-                and r.output[-1] == r.eos_id
-            if len(r.output) >= r.max_new or hit_eos \
+            hit_eos = r.eos_id is not None and r.output[-1] == r.eos_id
+            if hit_eos or len(r.output) >= r.max_new \
                     or slot.pos >= self.max_seq:
                 r.finished = time.time()
                 self.done[r.uid] = r
@@ -163,3 +215,8 @@ class ServingEngine:
         t0 = min(r.submitted for r in self.done.values())
         t1 = max(r.finished for r in self.done.values())
         return toks / max(t1 - t0, 1e-9)
+
+    def latencies(self) -> np.ndarray:
+        """Per-request completion latency (submit -> finish) in seconds."""
+        return np.array(sorted(r.finished - r.submitted
+                               for r in self.done.values()))

@@ -10,11 +10,11 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
     import numpy as np
-    from jax.sharding import AxisType, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
     from repro.optim.hierarchical import hierarchical_grad_reduce
 
-    mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("pod", "data"))
     key = jax.random.PRNGKey(0)
     n, dim = 8, 64
     gs = jax.random.normal(key, (n, dim))          # one grad per shard
@@ -22,22 +22,20 @@ SCRIPT = textwrap.dedent("""
     def step(g, err):
         return hierarchical_grad_reduce(g, err)
 
-    f = jax.jit(jax.shard_map(step, mesh=mesh,
-                              in_specs=(P(("pod", "data")),
-                                        P(("pod", "data"))),
-                              out_specs=(P(("pod", "data")),
-                                         P(("pod", "data"))),
-                              check_vma=False))
+    f = jax.jit(shard_map(step, mesh=mesh,
+                          in_specs=(P(("pod", "data")),
+                                    P(("pod", "data"))),
+                          out_specs=(P(("pod", "data")),
+                                     P(("pod", "data")))))
 
     # exact reference: fleet mean
     exact = jnp.broadcast_to(gs.mean(0, keepdims=True), gs.shape)
 
     # (a) uncompressed path == exact
-    f0 = jax.jit(jax.shard_map(
+    f0 = jax.jit(shard_map(
         lambda g, e: hierarchical_grad_reduce(g, e, compress=False),
         mesh=mesh, in_specs=(P(("pod", "data")), P(("pod", "data"))),
-        out_specs=(P(("pod", "data")), P(("pod", "data"))),
-        check_vma=False))
+        out_specs=(P(("pod", "data")), P(("pod", "data")))))
     out0, _ = f0(gs.reshape(n, dim), jnp.zeros((n, dim)))
     np.testing.assert_allclose(np.asarray(out0), np.asarray(exact),
                                rtol=1e-5, atol=1e-6)

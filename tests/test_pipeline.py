@@ -13,10 +13,10 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp
     import numpy as np
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh
     from repro.parallel.pipeline import pipeline_forward, sequential_reference
 
-    mesh = jax.make_mesh((4,), ("pipe",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((4,), ("pipe",))
     n_stages, n_micro, bm, d = 4, 8, 2, 16
     key = jax.random.PRNGKey(0)
     params = {"w": jax.random.normal(key, (n_stages, d, d)) * 0.2,
