@@ -10,6 +10,9 @@ more memory than they save, so the search stays online).  Two workloads:
   * --workload mixed: continuous batching over mixed-length synthetic
     traffic through the overlap-admission ServingEngine (prompts and
     generation budgets drawn per request; per-slot admission/retirement).
+    --cache-backend picks the KV-cache layout (dense worst-case or paged
+    with --page-size/--cache-tokens; see serving/kv_cache.py) and
+    --temperature/--top-p enable in-step nucleus sampling.
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
       --smoke --batch 4 --prompt-len 32 --gen 16
@@ -78,6 +81,18 @@ def main():
     ap.add_argument("--prompt-bucket", type=int, default=256)
     ap.add_argument("--admission", choices=("overlap", "wave"),
                     default="overlap")
+    ap.add_argument("--cache-backend", choices=("dense", "paged"),
+                    default="dense",
+                    help="KV-cache layout (serving/kv_cache.py)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per page for --cache-backend paged")
+    ap.add_argument("--cache-tokens", type=int, default=None,
+                    help="paged pool capacity in tokens "
+                         "(default: slots * max-seq, the dense worst case)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus mass kept when sampling")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -91,16 +106,26 @@ def main():
 
     if args.workload == "mixed":
         from repro.serving.workload import mixed_requests, run_workload
-        reqs = mixed_requests(cfg.vocab, args.requests, seed=args.seed)
+        reqs = mixed_requests(cfg.vocab, args.requests, seed=args.seed,
+                              temperature=args.temperature,
+                              top_p=args.top_p)
         stats = run_workload(cfg, params, dsg, reqs,
                              admission=args.admission, n_slots=args.slots,
                              max_seq=args.max_seq,
-                             prompt_bucket=args.prompt_bucket)
-        print(f"[{stats['admission']}] {stats['requests']} requests, "
+                             prompt_bucket=args.prompt_bucket,
+                             cache_backend=args.cache_backend,
+                             page_size=args.page_size,
+                             cache_tokens=args.cache_tokens,
+                             seed=args.seed)
+        print(f"[{stats['admission']}/{stats['cache_backend']}] "
+              f"{stats['requests']} requests, "
               f"{stats['tokens']} tokens in {stats['wall_s']:.2f}s = "
-              f"{stats['tok_per_s']:.1f} tok/s; latency "
+              f"{stats['tok_per_s']:.1f} tok/s "
+              f"(decode {stats['decode_tok_per_s']:.1f} tok/s); latency "
               f"p50 {stats['p50_s']:.2f}s p95 {stats['p95_s']:.2f}s "
-              f"({stats['steps']} decode steps)")
+              f"({stats['steps']} decode steps, "
+              f"cache {stats['cache_bytes'] / 1e6:.2f} MB resident, "
+              f"{stats['truncated']} truncated)")
         return
 
     rng = np.random.default_rng(0)

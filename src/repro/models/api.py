@@ -7,6 +7,12 @@ Every architecture family exposes the same verbs:
   prefill(params, dsg, cfg, inputs, cache)       -> (last_logits, state)
   decode_step(params, dsg, cfg, token, state, pos) -> (logits, state)
   make_inputs(cfg, shape, kind, concrete)        -> batch pytree
+
+make_cache builds the dense worst-case layout; serving picks the cache
+LAYOUT through repro.serving.kv_cache backends ("dense" | "paged") and
+passes the backend's view into prefill/decode_step — decoder-family
+decode also accepts the paged view ({'pages_k','pages_v','page_table'},
+see serving/kv_cache.py).
 """
 from __future__ import annotations
 
@@ -134,43 +140,40 @@ def decode_step(params, dsg, cfg: ModelConfig, token, state, pos,
 
 
 # ---------------------------------------------------------------------------
-# per-slot cache surgery (overlap-admission continuous batching)
+# per-slot cache surgery — DEPRECATED thin wrappers
 # ---------------------------------------------------------------------------
 #
-# The serving engine admits one prompt at a time into a live batched cache:
-# the prompt is prefilled against a throwaway 1-lane cache and its K/V pages
-# (plus implicit position state: everything below the prompt length) are
-# scattered into lane `slot` of the engine cache while the other lanes keep
-# decoding.  These helpers assume the KV-cache layout of the decoder
-# families — every cache leaf carries the batch on axis 1 (L, B, ...) — which
-# holds for transformer and encdec caches; recurrent families (xlstm/zamba)
-# keep per-lane state elsewhere and are not served by the slot engine yet.
+# The engine-facing cache surface now lives in repro.serving.kv_cache: a
+# pluggable KVCacheBackend ("dense" | "paged") builds and mutates an opaque
+# CacheHandle pytree (make / write / ensure / free / view_for_attention),
+# and the serving scheduler drives that protocol instead of these helpers.
+# They predate the backend API and are kept as thin wrappers for callers
+# that still hold raw dense cache dicts; they assume every cache leaf
+# carries the batch on axis 1 (L, B, ...), which holds for transformer and
+# encdec caches.
 
 def make_slot_cache(cfg: ModelConfig, max_seq: int, dtype=None):
-    """A 1-lane cache for solo prompt prefill (same Smax as the engine
-    cache, so a lane-to-lane scatter lines up exactly)."""
+    """Deprecated: a 1-lane dense cache for solo prompt prefill.  Same as
+    ``make_cache(cfg, 1, max_seq)``; new code should build caches through a
+    serving.kv_cache backend."""
     return make_cache(cfg, 1, max_seq, dtype)
 
 
 def prefill_slot(params, dsg, cfg: ModelConfig, tokens, lane_cache,
                  mesh=None, batch_axes=None):
-    """Prefill a single prompt lane.  tokens (1, P) int32 ->
-    (last_logits (1, V), filled 1-lane cache)."""
+    """Deprecated: prefill a single prompt lane.  tokens (1, P) int32 ->
+    (last_logits (1, V), filled 1-lane cache).  Same as ``prefill`` with a
+    ``{"tokens": ...}`` batch."""
     return prefill(params, dsg, cfg, {"tokens": tokens}, lane_cache,
                    mesh=mesh, batch_axes=batch_axes)
 
 
 def merge_slot_cache(cache, lane_cache, slot):
-    """Scatter a 1-lane cache into lane `slot` of the batched cache.
-
-    Writes the FULL sequence extent of the lane (not just the prompt), so
-    stale K/V left behind by a retired request can never leak into the new
-    occupant's attention window.  `slot` may be a traced scalar (the helper
-    is jit-friendly; the engine jits it once)."""
-    def upd(c, lane):
-        start = (0, slot) + (0,) * (c.ndim - 2)
-        return jax.lax.dynamic_update_slice(c, lane.astype(c.dtype), start)
-    return jax.tree.map(upd, cache, lane_cache)
+    """Deprecated: scatter a 1-lane cache into lane `slot` of a batched
+    dense cache.  Delegates to serving.kv_cache.dense_merge (the
+    DenseBackend write primitive)."""
+    from repro.serving.kv_cache import dense_merge
+    return dense_merge(cache, lane_cache, slot)
 
 
 # ---------------------------------------------------------------------------

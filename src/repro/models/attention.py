@@ -172,6 +172,7 @@ def self_attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
                    cache: Optional[dict] = None,
                    cache_pos: Optional[jax.Array] = None,
                    cache_kv_pos: Optional[jax.Array] = None,
+                   page_table: Optional[jax.Array] = None,
                    shard: str = "auto", bf16_scores: bool = False):
     """Self-attention over x (B, S, d).
 
@@ -183,6 +184,16 @@ def self_attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
     at its own depth (q_pos is then (B, S)).  cache_kv_pos = absolute
     positions held by each cache slot (defaults to arange(Smax)) -> returns
     (out, updated_cache).
+
+    Paged decode (serving/kv_cache.py PagedBackend): page_table is the
+    per-lane (B, max_pages) int32 map and cache={'k','v'} are the physical
+    page pools (P, page_size, Kv, D).  The new token is scattered through
+    the page table and the lane's logical window is gathered back for
+    attention; logical positions beyond the lane's depth read junk
+    (unallocated rows point at the scratch page) but are masked by
+    `kp <= qp` exactly as unwritten dense slots are.  Per-lane
+    single-token decode only — the seam the Pallas gather kernel will
+    replace with page-granular HBM reads.
     """
     b, s, _ = x.shape
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
@@ -193,9 +204,28 @@ def self_attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
     k_new = (apply_rope(k_new, rope_pos, rope_theta)
              if rope_theta > 0 else k_new)
 
+    paged = page_table is not None
     if cache is None:
+        if paged:
+            raise NotImplementedError(
+                "paged KV cache has no prefill path: prefill runs on a "
+                "dense 1-lane cache and is spliced in by the backend")
         k, v = k_new, v_new
         kv_pos = q_pos
+    elif paged:
+        if s != 1 or jnp.ndim(cache_pos) != 1:
+            raise NotImplementedError(
+                "paged KV cache supports per-lane single-token decode only")
+        ps_sz = cache["k"].shape[1]
+        lanes = jnp.arange(b)
+        pp = page_table[lanes, cache_pos // ps_sz]
+        off = cache_pos % ps_sz
+        pk = cache["k"].at[pp, off].set(k_new[:, 0].astype(cache["k"].dtype))
+        pv = cache["v"].at[pp, off].set(v_new[:, 0].astype(cache["v"].dtype))
+        t = jnp.arange(page_table.shape[1] * ps_sz)
+        k = pk[page_table[:, t // ps_sz], t % ps_sz]
+        v = pv[page_table[:, t // ps_sz], t % ps_sz]
+        kv_pos = cache_kv_pos if cache_kv_pos is not None else t
     elif jnp.ndim(cache_pos) == 1:
         # per-lane scatter: lane i writes its tokens at its own position
         upd = jax.vmap(
@@ -248,6 +278,10 @@ def self_attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
     out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     if cache is None:
         return out, {"k": k_new, "v": v_new}
+    if paged:
+        # the updated pools go back as-is (the page table addresses them);
+        # pool sharding is deferred to the Pallas page-gather kernel
+        return out, {"k": pk, "v": pv}
     if mode != "none":
         k = pctx.constrain(k, ba, "model", None, None)
         v = pctx.constrain(v, ba, "model", None, None)

@@ -135,7 +135,7 @@ def _ffn_apply(p: dict, dsg_l: Optional[dict], r: Optional[jax.Array],
 
 
 def _block(p: dict, dsg_l, r, x, cfg: ModelConfig, q_pos, cache, cache_pos,
-           mesh, batch_axes):
+           page_table, mesh, batch_axes):
     from repro.parallel import context as pctx
 
     def boundary(t):
@@ -158,7 +158,8 @@ def _block(p: dict, dsg_l, r, x, cfg: ModelConfig, q_pos, cache, cache_pos,
         p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
         rope_theta=cfg.rope_theta, q_pos=q_pos, causal=True,
         window=cfg.window, cache=cache, cache_pos=cache_pos,
-        shard=cfg.attn_shard, bf16_scores=cfg.attn_bf16_scores)
+        page_table=page_table, shard=cfg.attn_shard,
+        bf16_scores=cfg.attn_bf16_scores)
     x = x + boundary(a)
     h = norm_apply(cfg.norm, p["ln_ffn"], x)
     f, aux = _ffn_apply(p, dsg_l, r, h, cfg, mesh, batch_axes)
@@ -176,10 +177,17 @@ def forward(params: dict, dsg: Optional[dict], cfg: ModelConfig,
     """tokens (B, S) -> (logits, new_cache, aux_loss).
 
     prefix_embeds (B, P, d): VLM stub patch embeddings, prepended.
-    cache: stacked per-layer KV {'k': (L,B,Smax,Kv,D), 'v': ...} for decode.
+    cache: stacked per-layer KV {'k': (L,B,Smax,Kv,D), 'v': ...} for decode,
+    or a paged-backend view {'pages_k': (L,P,ps,Kv,D), 'pages_v': ...,
+    'page_table': (B, max_pages)} (see serving/kv_cache.py; the page table
+    is shared by all layers, so it rides outside the layer scan).
     pos0: scalar start position, or a per-lane (B,) vector for continuous
     batching (each batch lane decodes at its own depth).
     """
+    page_table = None
+    if cache is not None and "page_table" in cache:
+        page_table = cache["page_table"]
+        cache = {"k": cache["pages_k"], "v": cache["pages_v"]}
     x = params["embed"].astype(_dtype(cfg))[tokens]
     if prefix_embeds is not None:
         x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
@@ -196,7 +204,7 @@ def forward(params: dict, dsg: Optional[dict], cfg: ModelConfig,
     def body(xc, scanned):
         p_l, dsg_l, cache_l = scanned
         y, new_cache, aux = _block(p_l, dsg_l, r, xc, cfg, q_pos, cache_l,
-                                   pos0, mesh, batch_axes)
+                                   pos0, page_table, mesh, batch_axes)
         return y, (new_cache, aux)
 
     if cfg.remat and cache is None:
@@ -204,6 +212,9 @@ def forward(params: dict, dsg: Optional[dict], cfg: ModelConfig,
 
     x, (new_cache, aux) = jax.lax.scan(
         body, x, (params["layers"], dsg_stack, cache))
+    if page_table is not None:
+        new_cache = {"pages_k": new_cache["k"], "pages_v": new_cache["v"],
+                     "page_table": page_table}
     x = norm_apply(cfg.norm, params["ln_final"], x)
     if last_only:
         x = x[:, -1:]
@@ -242,6 +253,14 @@ def train_loss(params: dict, dsg: Optional[dict], cfg: ModelConfig,
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                dtype=jnp.float32) -> dict:
     shape = (cfg.n_layers, batch, max_seq, cfg.n_kv, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=jnp.float32) -> dict:
+    """Physical page pool for the paged KV-cache backend
+    (serving/kv_cache.py): K/V each (L, n_pages, page_size, Kv, D)."""
+    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 

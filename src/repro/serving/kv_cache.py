@@ -1,0 +1,324 @@
+"""Pluggable KV-cache backends behind a unified `CacheHandle`.
+
+The serving engine used to hard-wire the dense worst-case cache layout
+(L, n_slots, Smax, Kv, D) into api.py / attention.py / scheduler.py.  This
+module makes the layout a backend choice:
+
+    backend = get_backend("paged", page_size=16, total_tokens=512)
+    handle  = backend.make(cfg, n_slots, max_seq)       # opaque CacheHandle
+    handle  = backend.write(handle, lane_kv, slot,      # admission splice
+                            n_tokens=pb, reserve_tokens=need)
+    handle  = backend.ensure(handle, slot, pos)         # growth while decoding
+    handle  = backend.free(handle, slot)                # retirement
+    data    = backend.view_for_attention(handle)        # pytree for forward()
+
+`CacheHandle` is a registered pytree, so the engine's jitted steps take and
+return it directly (buffer donation included); `kind` and `page_size` ride
+in the static treedef.
+
+`DenseBackend` keeps today's layout and is the equivalence baseline.
+`PagedBackend` stores K/V in fixed-size pages of `page_size` tokens:
+
+    pages_k / pages_v : (L, n_pages, page_size, Kv, D)   physical pool
+    page_table        : (n_slots, max_seq // page_size)  int32 logical->physical
+
+A host-side free-list `BlockAllocator` hands out physical pages; lanes
+allocate pages as `pos` grows and return them on retirement, so short
+requests stop paying worst-case `Smax` memory — the DSG move (exploit
+runtime-dynamic sparsity in the data layout instead of a dense worst-case
+structure) applied to the serving memory plane.  Physical page 0 is a
+reserved scratch page: unallocated page-table entries point at it, so
+gathers beyond a lane's depth read defined (masked-out) memory.  Free
+lanes never address it during decode — the engine mirrors the donor
+lane's page-table row for them, which keeps shared-threshold DRS
+deterministic (see scheduler._decode_cache_view).
+
+Out-of-pages policy: admission reserves the pages a request could ever
+need (`reserve_tokens`, normally `min(prompt_bucket + max_new, max_seq)`)
+and `can_admit` gates on free-minus-reserved, so `ensure` growth never
+fails mid-decode; a pool smaller than one request's reservation surfaces
+as a deferred admission, not silent corruption.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api, transformer
+
+NULL_PAGE = 0          # reserved scratch page; never handed out
+
+BACKENDS = ("dense", "paged")
+
+
+class OutOfPages(RuntimeError):
+    """The block allocator has fewer free pages than requested."""
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class CacheHandle:
+    """Opaque KV-cache pytree + static layout tag.
+
+    `data` holds the device arrays (dense: {'k','v'}; paged:
+    {'pages_k','pages_v','page_table'}); `kind`/`page_size` are static
+    aux data, so jitted functions can rebuild the handle around updated
+    leaves without retracing on layout.
+    """
+    data: dict
+    kind: str = "dense"
+    page_size: int = 0
+
+    def tree_flatten(self):
+        return (self.data,), (self.kind, self.page_size)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+
+# ---------------------------------------------------------------------------
+# block allocator (host-side)
+# ---------------------------------------------------------------------------
+
+class BlockAllocator:
+    """Free-list allocator over physical page ids [reserved, n_pages).
+
+    Page ids below `reserved` are never handed out (id 0 is the paged
+    backend's scratch page).  O(1) alloc/free; over-allocation raises
+    `OutOfPages`, double-free and foreign ids raise `ValueError`.
+    """
+
+    def __init__(self, n_pages: int, reserved: int = 0):
+        if n_pages <= reserved:
+            raise ValueError("allocator needs at least one allocatable page")
+        self.n_pages = n_pages
+        self.reserved = reserved
+        self._free = list(range(n_pages - 1, reserved - 1, -1))
+        self._live: set = set()
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list:
+        if n > len(self._free):
+            raise OutOfPages(
+                f"requested {n} pages, only {len(self._free)} free of "
+                f"{self.n_pages - self.reserved}")
+        out = [self._free.pop() for _ in range(n)]
+        self._live.update(out)
+        return out
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if p not in self._live:
+                raise ValueError(f"page {p} is not currently allocated")
+            self._live.remove(p)
+            self._free.append(p)
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+class _Backend:
+    """Shared backend plumbing: the handle's `data` is always the exact
+    pytree `transformer.forward` consumes, and resident bytes are just the
+    bytes the handle keeps alive."""
+
+    def view_for_attention(self, handle: CacheHandle) -> dict:
+        return handle.data
+
+    def resident_bytes(self, handle: CacheHandle) -> int:
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(handle.data))
+
+
+def dense_merge(cache: dict, lane_cache: dict, slot) -> dict:
+    """Scatter a 1-lane dense cache into lane `slot` of the batched cache.
+
+    Writes the FULL sequence extent of the lane (not just the prompt), so
+    stale K/V left behind by a retired request can never leak into the new
+    occupant's attention window.  `slot` may be a traced scalar (the
+    function is jit-friendly; backends jit it once).
+    """
+    def upd(c, lane):
+        start = (0, slot) + (0,) * (c.ndim - 2)
+        return jax.lax.dynamic_update_slice(c, lane.astype(c.dtype), start)
+    return jax.tree.map(upd, cache, lane_cache)
+
+
+class DenseBackend(_Backend):
+    """Worst-case dense layout: every cache leaf is (L, n_slots, Smax, ...).
+
+    Admission is a lane-to-lane scatter; `free`/`ensure` are no-ops (each
+    lane permanently owns its Smax stripe).
+    """
+
+    kind = "dense"
+    page_size = 0
+
+    def __init__(self):
+        self._merge = jax.jit(dense_merge, donate_argnums=(0,))
+
+    def make(self, cfg, n_slots: int, max_seq: int, dtype=None) -> CacheHandle:
+        return CacheHandle(api.make_cache(cfg, n_slots, max_seq, dtype),
+                           "dense", 0)
+
+    def write(self, handle: CacheHandle, slot_kv: dict, slot,
+              n_tokens: Optional[int] = None,
+              reserve_tokens: Optional[int] = None) -> CacheHandle:
+        return CacheHandle(self._merge(handle.data, slot_kv, slot), "dense", 0)
+
+    def ensure(self, handle: CacheHandle, slot: int, pos: int) -> CacheHandle:
+        return handle
+
+    def free(self, handle: CacheHandle, slot: int) -> CacheHandle:
+        return handle
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return True
+
+
+# ---------------------------------------------------------------------------
+# paged backend
+# ---------------------------------------------------------------------------
+
+def _paged_merge(pools: dict, lane: dict, pp: jax.Array) -> dict:
+    """Scatter the leading `len(pp)` pages of a 1-lane dense cache into the
+    physical pages `pp` of the pool (one compile per page count, i.e. per
+    prompt bucket).  Freshly allocated pages are fully overwritten, so a
+    previous occupant's K/V cannot leak.
+    """
+    ps = pools["pages_k"].shape[2]
+    n_lp = pp.shape[0]
+
+    def upd(pool, lane_leaf):
+        l, _, _, kv, d = lane_leaf.shape
+        chunks = lane_leaf[:, 0, :n_lp * ps].reshape(l, n_lp, ps, kv, d)
+        return pool.at[:, pp].set(chunks.astype(pool.dtype))
+
+    return {"pages_k": upd(pools["pages_k"], lane["k"]),
+            "pages_v": upd(pools["pages_v"], lane["v"])}
+
+
+class PagedBackend(_Backend):
+    """Fixed-size pages + per-lane page table + host free-list allocator.
+
+    The pool holds `total_tokens` worth of pages (default: the dense
+    worst case `n_slots * max_seq`; size it to expected peak concurrent
+    demand to realise the memory saving).  One backend instance manages
+    one live handle: the allocator and the host page-table mirror are the
+    source of truth, and every mutation returns a handle with a fresh
+    device copy of the (tiny) page table.
+    """
+
+    kind = "paged"
+
+    def __init__(self, page_size: int = 16,
+                 total_tokens: Optional[int] = None):
+        if page_size <= 0:
+            raise ValueError("page_size must be positive")
+        self.page_size = page_size
+        self.total_tokens = total_tokens
+        self.allocator: Optional[BlockAllocator] = None
+        self._table: Optional[np.ndarray] = None
+        self._resv: Optional[np.ndarray] = None
+        self._merge = jax.jit(_paged_merge, donate_argnums=(0,))
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def make(self, cfg, n_slots: int, max_seq: int, dtype=None) -> CacheHandle:
+        if self._table is not None:
+            raise RuntimeError("PagedBackend manages one live handle; "
+                               "create a fresh backend per engine")
+        if cfg.family not in api.DECODER_FAMILIES:
+            raise NotImplementedError(
+                f"paged KV cache supports decoder families only, "
+                f"not {cfg.family!r}")
+        if max_seq % self.page_size:
+            raise ValueError(f"max_seq={max_seq} must be a multiple of "
+                             f"page_size={self.page_size}")
+        total = self.total_tokens or n_slots * max_seq
+        n_pages = self.pages_for(total) + 1        # +1: scratch page 0
+        dt = dtype or api._dtype(cfg)   # same default as the dense cache
+        pool = transformer.init_paged_cache(cfg, n_pages, self.page_size, dt)
+        self.allocator = BlockAllocator(n_pages, reserved=1)
+        self.max_pages = max_seq // self.page_size
+        self._table = np.full((n_slots, self.max_pages), NULL_PAGE, np.int32)
+        self._resv = np.zeros(n_slots, np.int64)
+        data = {"pages_k": pool["k"], "pages_v": pool["v"],
+                "page_table": jnp.asarray(self._table)}
+        return CacheHandle(data, "paged", self.page_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """True when free-minus-reserved pages cover a request reserving
+        `n_tokens`; gating admissions on this makes `ensure` growth
+        infallible for already-admitted lanes."""
+        return (self.allocator.free_pages - int(self._resv.sum())
+                >= self.pages_for(n_tokens))
+
+    def write(self, handle: CacheHandle, slot_kv: dict, slot: int,
+              n_tokens: Optional[int] = None,
+              reserve_tokens: Optional[int] = None) -> CacheHandle:
+        """Splice a prefilled 1-lane dense cache into lane `slot`: allocate
+        pages covering the first `n_tokens` positions and scatter the
+        lane's K/V into them; `reserve_tokens` (>= n_tokens) additionally
+        reserves growth pages so later `ensure` calls cannot run out."""
+        if n_tokens is None:
+            raise ValueError("paged write needs n_tokens (the prompt extent)")
+        self._release(slot)
+        n_lp = self.pages_for(n_tokens)
+        need = max(self.pages_for(reserve_tokens), n_lp) \
+            if reserve_tokens else n_lp
+        pp = self.allocator.alloc(n_lp)
+        self._table[slot, :n_lp] = pp
+        self._resv[slot] = need - n_lp
+        pools = {"pages_k": handle.data["pages_k"],
+                 "pages_v": handle.data["pages_v"]}
+        pools = self._merge(pools, slot_kv, jnp.asarray(pp, jnp.int32))
+        pools["page_table"] = jnp.asarray(self._table)
+        return CacheHandle(pools, "paged", self.page_size)
+
+    def ensure(self, handle: CacheHandle, slot: int, pos: int) -> CacheHandle:
+        """Grow lane `slot` to cover a write at position `pos` (no-op when
+        the covering page is already mapped)."""
+        lp = pos // self.page_size
+        if self._table[slot, lp] != NULL_PAGE:
+            return handle
+        (pg,) = self.allocator.alloc(1)
+        self._table[slot, lp] = pg
+        self._resv[slot] = max(int(self._resv[slot]) - 1, 0)
+        return CacheHandle({**handle.data,
+                            "page_table": jnp.asarray(self._table)},
+                           "paged", self.page_size)
+
+    def free(self, handle: CacheHandle, slot: int) -> CacheHandle:
+        """Return lane `slot`'s pages to the free list (retirement)."""
+        self._release(slot)
+        return CacheHandle({**handle.data,
+                            "page_table": jnp.asarray(self._table)},
+                           "paged", self.page_size)
+
+    def _release(self, slot: int) -> None:
+        pages = [int(p) for p in self._table[slot] if p != NULL_PAGE]
+        if pages:
+            self.allocator.free(pages)
+        self._table[slot] = NULL_PAGE
+        self._resv[slot] = 0
+
+
+def get_backend(name: str, *, page_size: int = 16,
+                total_tokens: Optional[int] = None):
+    """Factory: "dense" -> DenseBackend, "paged" -> PagedBackend."""
+    if name == "dense":
+        return DenseBackend()
+    if name == "paged":
+        return PagedBackend(page_size=page_size, total_tokens=total_tokens)
+    raise ValueError(f"unknown cache backend {name!r}; "
+                     f"expected one of {BACKENDS}")

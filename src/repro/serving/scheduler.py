@@ -2,16 +2,29 @@
 
 Fixed-slot continuous batching (vLLM-style, static shapes for XLA): the
 engine keeps `n_slots` decode lanes and admits a new prompt into ANY free
-lane on ANY step — per-slot KV-cache surgery (api.prefill_slot +
-api.merge_slot_cache) prefills the prompt against a throwaway 1-lane cache
-and scatters its K/V pages into the freed lane while the other lanes keep
-decoding.  Per-slot position counters stay honest (the decode step takes a
-per-lane position vector), retirement is per-slot on EOS-after-emit /
-max_new / max_seq, and retired lanes are masked out of sampling.
+lane on ANY step.  Admission prefills the prompt against a throwaway
+1-lane dense cache and splices it into the live cache through a pluggable
+KV-cache backend (serving/kv_cache.py):
+
+  * cache_backend="dense" — today's worst-case (L, n_slots, Smax, Kv, D)
+    layout; the equivalence baseline.
+  * cache_backend="paged" — fixed-size pages + per-lane page table + host
+    free-list allocator; lanes allocate pages as `pos` grows and return
+    them on retirement, so short requests stop paying Smax memory
+    (benchmarks/bench_paged_cache.py measures the resident-bytes drop).
+
+Per-slot position counters stay honest (the decode step takes a per-lane
+position vector), retirement is per-slot on EOS-after-emit / max_new /
+max_seq, and retired lanes are masked out of sampling.  Sampling runs
+INSIDE the jitted decode step: per-lane temperature / nucleus top-p with
+a per-(step, lane) PRNG key, falling back to greedy argmax for
+temperature=0 lanes, so decode stays a single device dispatch.
 
 Prompt lengths are bucketed (DEFAULT_BUCKETS, capped at `prompt_bucket`)
 so admission compiles one prefill per bucket — a small fixed set of
-shapes; the decode step compiles exactly once.
+shapes; the decode step compiles exactly once.  Prompts longer than the
+largest bucket keep only their last `bucket` tokens; the request is
+flagged `truncated=True` and the engine warns once.
 
 `admission="wave"` preserves the old drain-then-refill policy (admit only
 when every lane is free) as a benchmark baseline — bench_serving.py
@@ -25,16 +38,33 @@ from __future__ import annotations
 
 import collections
 import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api
+from repro.serving import kv_cache
+from repro.serving.kv_cache import CacheHandle
 
 DEFAULT_BUCKETS = (16, 32, 64, 96, 128, 192, 256)
+
+
+def bucket_sizes(prompt_bucket: int, max_seq: int,
+                 buckets: Optional[Sequence[int]] = None) -> tuple:
+    """The prompt buckets an engine will compile: candidate sizes capped
+    at prompt_bucket and at max_seq - 1 (a prompt filling every cache
+    position would leave no decode headroom).  Exposed so pool-sizing
+    code (benchmarks/bench_paged_cache.py) derives the same largest
+    bucket as the engine's admission path."""
+    cap = min(prompt_bucket, max_seq - 1)
+    bs = buckets if buckets is not None else DEFAULT_BUCKETS
+    return tuple(sorted({min(b, cap) for b in bs}))
+
+_ADMIT_SALT = 0xADA117   # folds admission PRNG keys off the decode stream
 
 
 @dataclass
@@ -43,9 +73,13 @@ class Request:
     prompt: np.ndarray               # (P,) int32
     max_new: int = 32
     eos_id: Optional[int] = None
+    temperature: float = 0.0         # 0 -> greedy argmax
+    top_p: float = 1.0               # nucleus mass kept when sampling
     # filled by the engine:
     output: List[int] = field(default_factory=list)
+    truncated: bool = False          # prompt exceeded the largest bucket
     submitted: float = 0.0
+    started: float = 0.0             # admission time (first compute)
     finished: float = 0.0
 
 
@@ -59,6 +93,27 @@ class _Slot:
         return self.req is None
 
 
+def sample_tokens(logits: jax.Array, keys: jax.Array, temps: jax.Array,
+                  top_ps: jax.Array) -> jax.Array:
+    """Per-lane temperature + nucleus sampling, jit-friendly.
+
+    logits (B, V), keys (B, 2) per-lane PRNG keys, temps/top_ps (B,).
+    Lanes with temperature 0 take the argmax; the rest sample from the
+    smallest prefix of the sorted distribution whose mass reaches top_p
+    (the crossing token is kept, so top-1 always survives).
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / jnp.maximum(temps, 1e-6)[:, None]
+    srt = jnp.sort(lg, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(srt, axis=-1)
+    keep = (jnp.cumsum(probs, axis=-1) - probs) < top_ps[:, None]
+    keep = keep.at[:, 0].set(True)     # top-1 survives even top_p == 0
+    kth = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1, keepdims=True)
+    lg = jnp.where(lg >= kth, lg, -jnp.inf)
+    samp = jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
+    return jnp.where(temps > 0, samp, greedy)
+
+
 class ServingEngine:
     """Continuous batching over a fixed slot count.
 
@@ -66,19 +121,27 @@ class ServingEngine:
     length bucket that holds it (shorter prompts left-padded), so there is
     one prefill computation per bucket and ONE decode computation to
     compile.  Each admission runs a 1-lane prefill and splices the result
-    into the live batched cache — active lanes' K/V bytes are never
-    touched, and under per-row DRS selection (threshold_mode="topk")
-    their outputs are bit-identical to a solo run (see
-    tests/test_serving_overlap.py).  With the paper's inter-sample
-    threshold sharing (threshold_mode="shared") all lanes couple to batch
-    row 0's scores by design; the engine keeps that row meaningful by
-    mirroring idle lanes onto an active one.
+    into the live batched cache via the backend — active lanes' K/V bytes
+    are never touched, and under per-row DRS selection
+    (threshold_mode="topk") their outputs are bit-identical to a solo run
+    AND across cache backends (see tests/test_serving_overlap.py).  With
+    the paper's inter-sample threshold sharing (threshold_mode="shared")
+    all lanes couple to batch row 0's scores by design; the engine keeps
+    that row meaningful by mirroring idle lanes onto an active one.
+
+    The paged backend reserves a request's worst-case page count
+    (min(bucket + max_new, max_seq)) at admission, so page-table growth
+    during decode can never run out; a pool with too few free pages defers
+    admission until retirements return pages.
     """
 
     def __init__(self, cfg, params, dsg, *, n_slots: int = 4,
                  max_seq: int = 256, prompt_bucket: int = 64,
                  buckets: Optional[Sequence[int]] = None,
-                 admission: str = "overlap"):
+                 admission: str = "overlap",
+                 cache_backend: Union[str, object] = "dense",
+                 page_size: int = 16, cache_tokens: Optional[int] = None,
+                 seed: int = 0):
         if admission not in ("overlap", "wave"):
             raise ValueError(f"unknown admission policy {admission!r}")
         self.cfg = cfg
@@ -86,42 +149,102 @@ class ServingEngine:
         self.dsg = dsg
         self.n_slots = n_slots
         self.max_seq = max_seq
-        self.prompt_bucket = min(prompt_bucket, max_seq)
-        bs = buckets if buckets is not None else DEFAULT_BUCKETS
-        self.buckets = tuple(sorted({min(b, self.prompt_bucket) for b in bs}))
+        # a prompt filling all max_seq positions would admit a lane with
+        # zero decode headroom (its first decode write lands out of cache
+        # range), so the largest bucket always leaves one position free
+        self.prompt_bucket = min(prompt_bucket, max_seq - 1)
+        self.buckets = bucket_sizes(prompt_bucket, max_seq, buckets)
         self.admission = admission
         self.queue: collections.deque = collections.deque()
         self.slots = [_Slot() for _ in range(n_slots)]
         self.done: Dict[int, Request] = {}
         self.steps = 0
+        self.decode_seconds = 0.0     # time inside jitted decode steps
+        self.decode_tokens = 0        # tokens emitted by those steps
+        self._draws = 0               # admission PRNG counter
+        self._warned_truncation = False
+        self._base_key = jax.random.PRNGKey(seed)
 
-        self.cache = api.make_cache(cfg, n_slots, max_seq)
-        # zero 1-lane template reused by every admission (prefill is
+        self.backend = (cache_backend if hasattr(cache_backend, "make")
+                        else kv_cache.get_backend(
+                            cache_backend, page_size=page_size,
+                            total_tokens=cache_tokens))
+        self.cache = self.backend.make(cfg, n_slots, max_seq)
+        # zero 1-lane dense template reused by every admission (prefill is
         # functional: the template is never mutated, and its zero tail
-        # wipes any stale K/V when merged over a retired lane)
-        self._lane0 = api.make_slot_cache(cfg, max_seq)
-        # token each lane feeds to its next decode step (argmax of the
+        # wipes any stale K/V when merged over a retired dense lane)
+        self._lane0 = api.make_cache(cfg, 1, max_seq)
+        # token each lane feeds to its next decode step (sampled from the
         # lane's latest logits; junk for free lanes, masked at emit time)
         self._next_tok = np.zeros(n_slots, np.int32)
 
-        # greedy sampling is fused into the jitted steps so decode and
-        # admission are each a single device dispatch (the tiny-model
-        # regime is dispatch-bound; see bench_serving.py)
-        def _decode(p, d, tok, c, pos):
-            logits, c = api.decode_step(p, d, cfg, tok, c, pos)
-            return jnp.argmax(logits, -1).astype(jnp.int32), c
+        # sampling is fused into the jitted decode step (one device
+        # dispatch per step; the tiny-model regime is dispatch-bound, see
+        # bench_serving.py) — with a separate greedy-only variant so the
+        # common all-temperature-0 step never pays the full-vocab
+        # sort/softmax of nucleus sampling.  Admission is three
+        # dispatches (prefill, backend splice, first-token pick); it runs
+        # once per request, not per step.
+        def _prefill(p, d, toks, lane0):
+            logits, lane = api.prefill(p, d, cfg, {"tokens": toks}, lane0)
+            return logits[0], lane
 
-        def _admit_one(p, d, toks, lane0, c, slot):
-            logits, lane = api.prefill_slot(p, d, cfg, toks, lane0)
-            tok = jnp.argmax(logits[0]).astype(jnp.int32)
-            return tok, api.merge_slot_cache(c, lane, slot)
+        def _first_tok(logits, key, draw, temp, top_p):
+            k = jax.random.fold_in(jax.random.fold_in(key, _ADMIT_SALT),
+                                   draw)
+            return sample_tokens(logits[None], jax.random.split(k, 1),
+                                 temp[None], top_p[None])[0]
 
-        # the engine cache is donated: the caller always rebinds
+        def _decode_cache_view(c, free_mask, donor):
+            # a free paged lane's table row is all NULL: left alone it
+            # would gather scratch-page junk — nondeterministic row-0
+            # scores under shared-threshold DRS, since mirrored lanes also
+            # scatter to one scratch slot (duplicate-index winner is
+            # unspecified).  Mirroring the donor's page-table row instead
+            # makes free lanes exact clones of the donor: they read the
+            # donor's K/V and re-write its own values to its own pages
+            # (identical duplicates are order-independent), so paged
+            # decode is deterministic in every threshold mode.
+            if c.kind != "paged":
+                return c.data
+            pt = c.data["page_table"]
+            pt = jnp.where(free_mask[:, None], pt[donor], pt)
+            return {**c.data, "page_table": pt}
+
+        def _restore_table(data, c):
+            # the host mirror is the source of truth for the page table;
+            # the lane-mirrored view must not escape the step
+            if c.kind != "paged":
+                return data
+            return {**data, "page_table": c.data["page_table"]}
+
+        def _decode_greedy(p, d, tok, c, pos, free_mask, donor):
+            view = _decode_cache_view(c, free_mask, donor)
+            logits, data = api.decode_step(p, d, cfg, tok, view, pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, CacheHandle(_restore_table(data, c), c.kind,
+                                    c.page_size)
+
+        def _decode_sample(p, d, tok, c, pos, free_mask, donor, key, step,
+                          temps, top_ps):
+            view = _decode_cache_view(c, free_mask, donor)
+            logits, data = api.decode_step(p, d, cfg, tok, view, pos)
+            keys = jax.random.split(jax.random.fold_in(key, step),
+                                    tok.shape[0])
+            nxt = sample_tokens(logits, keys, temps, top_ps)
+            return nxt, CacheHandle(_restore_table(data, c), c.kind,
+                                    c.page_size)
+
+        # the engine cache handle is donated: the caller always rebinds
         # self.cache to the result, and donation lets XLA update one
         # lane / one token column in place instead of copying the whole
-        # (L, n_slots, Smax, Kv, D) cache every call
-        self._jit_decode = jax.jit(_decode, donate_argnums=(3,))
-        self._jit_admit = jax.jit(_admit_one, donate_argnums=(4,))
+        # cache every call
+        self._jit_prefill = jax.jit(_prefill)
+        self._jit_first = jax.jit(_first_tok)
+        self._jit_decode_greedy = jax.jit(_decode_greedy,
+                                          donate_argnums=(3,))
+        self._jit_decode_sample = jax.jit(_decode_sample,
+                                          donate_argnums=(3,))
 
     # -- public API ---------------------------------------------------------
 
@@ -144,23 +267,49 @@ class ServingEngine:
         return self.buckets[-1]      # longer prompts truncate to max bucket
 
     def _admit(self):
-        """Admit queued prompts into free lanes via per-slot cache surgery.
+        """Admit queued prompts into free lanes via backend cache surgery.
 
-        Overlap policy: every free lane refills immediately.  Wave policy:
-        admission waits until ALL lanes have drained (the old baseline)."""
+        Overlap policy: every free lane refills immediately (subject to
+        the paged backend having pages for the request's reservation).
+        Wave policy: admission waits until ALL lanes have drained (the old
+        baseline)."""
         if self.admission == "wave" and any(not s.free for s in self.slots):
             return
         for i, slot in enumerate(self.slots):
             if not slot.free or not self.queue:
                 continue
-            req = self.queue.popleft()
-            pb = self._bucket_for(len(req.prompt))
+            req = self.queue[0]
+            plen = len(req.prompt)
+            pb = self._bucket_for(plen)
+            if plen > pb:
+                req.truncated = True
+                if not self._warned_truncation:
+                    warnings.warn(
+                        f"prompt of request {req.uid} ({plen} tokens) "
+                        f"exceeds the largest bucket ({pb}); keeping the "
+                        f"last {pb} tokens (warned once per engine)")
+                    self._warned_truncation = True
+            need = min(pb + req.max_new, self.max_seq)
+            if not self.backend.can_admit(need):
+                break            # retirements will free pages; retry later
+            self.queue.popleft()
             toks = np.zeros((1, pb), np.int32)
             pr = req.prompt[-pb:]
             toks[0, pb - len(pr):] = pr
-            tok, self.cache = self._jit_admit(self.params, self.dsg,
-                                              jnp.asarray(toks), self._lane0,
-                                              self.cache, i)
+            logits, lane = self._jit_prefill(self.params, self.dsg,
+                                             jnp.asarray(toks), self._lane0)
+            self.cache = self.backend.write(self.cache, lane, i,
+                                            n_tokens=pb, reserve_tokens=need)
+            # _draws advances for every admission so the sampling key
+            # schedule doesn't depend on how many greedy requests preceded
+            self._draws += 1
+            if req.temperature > 0:
+                tok = self._jit_first(logits, self._base_key, self._draws,
+                                      np.float32(req.temperature),
+                                      np.float32(req.top_p))
+            else:
+                tok = jnp.argmax(logits)
+            req.started = time.time()
             slot.req = req
             slot.pos = pb
             self._next_tok[i] = int(tok)
@@ -169,28 +318,56 @@ class ServingEngine:
         self._admit()
         active = [i for i, s in enumerate(self.slots) if not s.free]
         if not active:
+            if self.queue:
+                raise RuntimeError(
+                    "engine stalled: queued prompts cannot be admitted — "
+                    "the paged cache pool is smaller than a single "
+                    "request's page reservation; raise cache_tokens or "
+                    "lower max_new/prompt_bucket")
             return
         # Free/retired lanes mirror the first active lane instead of feeding
         # an arbitrary pad token: with the paper's inter-sample threshold
         # sharing (DRS threshold_mode="shared", taken from batch row 0) an
         # idle lane 0 would otherwise drive every live lane's sparsity mask
-        # with junk.  Mirrored lanes emit nothing and their K/V scribbles
-        # are wiped by the full-lane merge on the next admission.
+        # with junk.  Mirrored lanes emit nothing; their K/V scribbles land
+        # in a lane that the next admission fully overwrites (dense) or in
+        # the donor's own pages as identical duplicates (paged — see
+        # _decode_cache_view) and are never observed.
         donor = active[0]
         tok = np.array(self._next_tok, np.int32)
         pos = np.empty(self.n_slots, np.int32)
+        free_mask = np.zeros(self.n_slots, np.bool_)
+        temps = np.zeros(self.n_slots, np.float32)
+        top_ps = np.ones(self.n_slots, np.float32)
         for i, s in enumerate(self.slots):
             if s.free:
+                free_mask[i] = True
                 tok[i] = self._next_tok[donor]
                 pos[i] = self.slots[donor].pos
             else:
                 pos[i] = s.pos
+                temps[i] = s.req.temperature
+                top_ps[i] = s.req.top_p
+                # page-table growth for this step's write position (no-op
+                # for the dense backend or when the page is already mapped)
+                self.cache = self.backend.ensure(self.cache, i, s.pos)
         for i in active:
             self.slots[i].req.output.append(int(tok[i]))
-        next_tok, self.cache = self._jit_decode(
-            self.params, self.dsg, jnp.asarray(tok)[:, None],
-            self.cache, jnp.asarray(pos))
-        self._next_tok = np.array(next_tok, np.int32)
+        t0 = time.perf_counter()
+        # PRNG keys depend only on (engine seed, step, lane), so mixing
+        # greedy-only and sampling steps never shifts the key schedule
+        if (temps > 0).any():
+            next_tok, self.cache = self._jit_decode_sample(
+                self.params, self.dsg, jnp.asarray(tok)[:, None],
+                self.cache, jnp.asarray(pos), free_mask, donor,
+                self._base_key, self.steps, temps, top_ps)
+        else:
+            next_tok, self.cache = self._jit_decode_greedy(
+                self.params, self.dsg, jnp.asarray(tok)[:, None],
+                self.cache, jnp.asarray(pos), free_mask, donor)
+        self._next_tok = np.array(next_tok, np.int32)   # syncs the device
+        self.decode_seconds += time.perf_counter() - t0
+        self.decode_tokens += len(active)
         self.steps += 1
         # per-slot retirement — AFTER the EOS token has been emitted, so a
         # stop token always appears in the output it terminates
@@ -205,16 +382,29 @@ class ServingEngine:
                 self.done[r.uid] = r
                 slot.req = None
                 slot.pos = 0
+                self.cache = self.backend.free(self.cache, i)
 
     # -- stats ---------------------------------------------------------------
 
     def throughput(self) -> float:
-        toks = sum(len(r.output) for r in self.done.values())
+        """End-to-end tok/s over the span from first ADMISSION to last
+        finish.  (An earlier version divided by the submit->finish span,
+        which charges the engine for queue wait accrued before it ever
+        ran — e.g. requests submitted long before run().)"""
         if not self.done:
             return 0.0
-        t0 = min(r.submitted for r in self.done.values())
+        toks = sum(len(r.output) for r in self.done.values())
+        t0 = min(r.started or r.submitted for r in self.done.values())
         t1 = max(r.finished for r in self.done.values())
         return toks / max(t1 - t0, 1e-9)
+
+    def decode_tok_per_s(self) -> float:
+        """Decode-only rate: emitted tokens over time spent inside the
+        jitted decode step (excludes admission/prefill and host
+        scheduling), the number to watch for cache-backend regressions."""
+        if not self.decode_tokens:
+            return 0.0
+        return self.decode_tokens / max(self.decode_seconds, 1e-9)
 
     def latencies(self) -> np.ndarray:
         """Per-request completion latency (submit -> finish) in seconds."""

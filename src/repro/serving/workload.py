@@ -18,7 +18,8 @@ from repro.serving.scheduler import Request, ServingEngine
 
 def mixed_requests(vocab: int, n_requests: int, *, seed: int = 0,
                    prompt_range=(8, 192), max_new_range=(8, 64),
-                   eos_id=None) -> List[Request]:
+                   eos_id=None, temperature: float = 0.0,
+                   top_p: float = 1.0) -> List[Request]:
     """Mixed-length synthetic traffic: uniform prompt lengths and
     generation budgets over the given ranges."""
     rng = np.random.default_rng(seed)
@@ -28,29 +29,45 @@ def mixed_requests(vocab: int, n_requests: int, *, seed: int = 0,
         max_new = int(rng.integers(max_new_range[0], max_new_range[1] + 1))
         prompt = rng.integers(0, vocab, plen, dtype=np.int32)
         reqs.append(Request(uid=uid, prompt=prompt, max_new=max_new,
-                            eos_id=eos_id))
+                            eos_id=eos_id, temperature=temperature,
+                            top_p=top_p))
     return reqs
 
 
 def run_workload(cfg, params, dsg, requests: List[Request], *,
                  admission: str = "overlap", n_slots: int = 4,
                  max_seq: int = 384, prompt_bucket: int = 256,
+                 cache_backend: str = "dense", page_size: int = 16,
+                 cache_tokens=None, seed: int = 0,
                  max_steps: int = 100_000) -> Dict[str, float]:
     """Run one engine over the request list; returns throughput/latency
     stats.  A warmup admission+decode over throwaway requests triggers the
     jit compiles first so the measurement is steady-state."""
     eng = ServingEngine(cfg, params, dsg, n_slots=n_slots, max_seq=max_seq,
-                        prompt_bucket=prompt_bucket, admission=admission)
-    # warmup: compile every prefill bucket + the decode step
+                        prompt_bucket=prompt_bucket, admission=admission,
+                        cache_backend=cache_backend, page_size=page_size,
+                        cache_tokens=cache_tokens, seed=seed)
+    # warmup: compile every prefill bucket + the decode step; when the
+    # real traffic samples, warm the sampling decode/admission variants
+    # too (same compiled shapes for any temperature > 0), so no jit
+    # compile lands inside the measured window
     vocab = cfg.vocab
+    warm_temp = max((r.temperature for r in requests), default=0.0)
     rng = np.random.default_rng(12345)
     for i, b in enumerate(eng.buckets):
         eng.submit(Request(uid=-1 - i,
                            prompt=rng.integers(0, vocab, b, dtype=np.int32),
+                           max_new=2, temperature=warm_temp))
+    if warm_temp > 0:    # mixed traffic also hits the greedy-only step
+        eng.submit(Request(uid=-1 - len(eng.buckets),
+                           prompt=rng.integers(0, vocab, eng.buckets[0],
+                                               dtype=np.int32),
                            max_new=2))
     eng.run(max_steps=max_steps)
     eng.done.clear()
     eng.steps = 0
+    eng.decode_seconds = 0.0
+    eng.decode_tokens = 0
 
     for r in requests:
         eng.submit(r)
@@ -61,10 +78,14 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
     lat = eng.latencies()
     return {
         "admission": admission,
+        "cache_backend": eng.backend.kind,
+        "cache_bytes": int(eng.backend.resident_bytes(eng.cache)),
         "requests": len(done),
         "tokens": toks,
+        "truncated": sum(r.truncated for r in done.values()),
         "wall_s": wall,
         "tok_per_s": toks / max(wall, 1e-9),
+        "decode_tok_per_s": eng.decode_tok_per_s(),
         "steps": eng.steps,
         "p50_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
         "p95_s": float(np.percentile(lat, 95)) if len(lat) else 0.0,

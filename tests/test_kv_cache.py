@@ -1,0 +1,123 @@
+"""Unit tests for the pluggable KV-cache backend layer
+(serving/kv_cache.py): block allocator alloc/free/reuse and out-of-pages
+behaviour, CacheHandle pytree round-trips, and paged-backend page-table /
+reservation bookkeeping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import api
+from repro.serving.kv_cache import (NULL_PAGE, BlockAllocator, CacheHandle,
+                                    OutOfPages, get_backend)
+
+
+# ---------------------------------------------------------------------------
+# block allocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_alloc_free_reuse():
+    a = BlockAllocator(8, reserved=1)          # ids 1..7 allocatable
+    assert a.free_pages == 7
+    p1 = a.alloc(3)
+    assert len(p1) == len(set(p1)) == 3
+    assert all(1 <= p < 8 for p in p1)         # scratch id 0 never issued
+    p2 = a.alloc(4)
+    assert a.free_pages == 0
+    assert not set(p1) & set(p2)
+    a.free(p1)
+    assert a.free_pages == 3
+    p3 = a.alloc(3)
+    assert set(p3) == set(p1)                  # freed pages are reused
+
+def test_allocator_out_of_pages_and_bad_frees():
+    a = BlockAllocator(4, reserved=1)
+    pages = a.alloc(3)
+    with pytest.raises(OutOfPages):
+        a.alloc(1)
+    a.free(pages[:1])
+    with pytest.raises(ValueError):            # double free
+        a.free(pages[:1])
+    with pytest.raises(ValueError):            # never-allocated id
+        a.free([0])
+    assert a.free_pages == 1
+
+def test_allocator_needs_allocatable_pages():
+    with pytest.raises(ValueError):
+        BlockAllocator(1, reserved=1)
+
+
+# ---------------------------------------------------------------------------
+# CacheHandle pytree
+# ---------------------------------------------------------------------------
+
+def test_cache_handle_pytree_roundtrip():
+    h = CacheHandle({"k": jnp.zeros((2, 3))}, "paged", 8)
+    leaves, treedef = jax.tree_util.tree_flatten(h)
+    h2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert h2.kind == "paged" and h2.page_size == 8
+    h3 = jax.jit(lambda x: x)(h)               # static aux survives jit
+    assert h3.kind == "paged" and h3.page_size == 8
+    np.testing.assert_array_equal(np.asarray(h3.data["k"]),
+                                  np.asarray(h.data["k"]))
+
+
+# ---------------------------------------------------------------------------
+# paged backend bookkeeping
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cfg():
+    return configs.get_smoke_config("internlm2-1.8b")
+
+
+def test_paged_backend_write_grow_free(cfg):
+    be = get_backend("paged", page_size=8, total_tokens=64)   # 8 pages
+    h = be.make(cfg, 2, 32)
+    assert h.kind == "paged" and h.page_size == 8
+    table = np.asarray(h.data["page_table"])
+    assert table.shape == (2, 4) and (table == NULL_PAGE).all()
+
+    lane = api.make_cache(cfg, 1, 32)
+    h = be.write(h, lane, 0, n_tokens=12, reserve_tokens=20)
+    row = be._table[0]
+    assert (row[:2] != NULL_PAGE).all() and (row[2:] == NULL_PAGE).all()
+    assert be.allocator.free_pages == 6
+    # reservation: ceil(20/8)=3 pages total, 2 allocated -> 1 outstanding
+    assert int(be._resv[0]) == 1
+    assert be.can_admit(40)                    # 5 <= 6 - 1
+    assert not be.can_admit(41)                # 6 > 6 - 1
+
+    h = be.ensure(h, 0, 16)                    # page for position 16
+    assert be._table[0, 2] != NULL_PAGE
+    assert int(be._resv[0]) == 0 and be.allocator.free_pages == 5
+    h2 = be.ensure(h, 0, 17)                   # already mapped -> no-op
+    assert h2 is h
+
+    h = be.free(h, 0)
+    assert (be._table[0] == NULL_PAGE).all()
+    assert be.allocator.free_pages == 8
+    assert (np.asarray(h.data["page_table"])[0] == NULL_PAGE).all()
+
+
+def test_paged_backend_guards(cfg):
+    be = get_backend("paged", page_size=8)
+    with pytest.raises(ValueError):            # max_seq not page-aligned
+        be.make(cfg, 2, 30)
+    be2 = get_backend("paged", page_size=8)
+    h = be2.make(cfg, 2, 32)
+    with pytest.raises(RuntimeError):          # one live handle per backend
+        be2.make(cfg, 2, 32)
+    with pytest.raises(ValueError):            # paged write needs n_tokens
+        be2.write(h, api.make_cache(cfg, 1, 32), 0)
+    with pytest.raises(ValueError):
+        get_backend("ring")
+
+
+def test_backend_resident_bytes(cfg):
+    dense = get_backend("dense")
+    hd = dense.make(cfg, 4, 256)
+    paged = get_backend("paged", page_size=16, total_tokens=4 * 96)
+    hp = paged.make(cfg, 4, 256)
+    assert dense.resident_bytes(hd) >= 2 * paged.resident_bytes(hp)

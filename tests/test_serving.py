@@ -1,5 +1,9 @@
 """Serving-layer tests: logit-DSG correctness/hit-rate and the
-continuous-batching engine."""
+continuous-batching engine (sampling, truncation signalling, throughput
+accounting)."""
+import time
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -116,3 +120,123 @@ def test_engine_eos_early_stop(engine_parts):
     # retirement happens AFTER the EOS token is emitted: the output is the
     # greedy prefix up to and including the first occurrence of eos_id
     assert done[1].output == probe[:j + 1]
+
+
+def test_paged_shared_mode_deterministic(engine_parts):
+    """Paged + the paper's shared-threshold DRS (the smoke default): free
+    lanes mirror the donor's page-table row, so row-0 scores driving every
+    lane's sparsity mask are real donor statistics, not scratch-page junk
+    — two identical runs (with a retirement mid-stream so a mirrored lane
+    actually participates) must agree exactly."""
+    cfg, params, dsg = engine_parts
+    assert cfg.dsg.threshold_mode == "shared"
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for n in (10, 6, 14)]
+
+    def run_once():
+        eng = ServingEngine(cfg, params, dsg, n_slots=2, max_seq=64,
+                            prompt_bucket=16, cache_backend="paged",
+                            page_size=8)
+        # max_new 3 vs 9: slot 1 retires and idles while slot 0 decodes
+        for uid, (p, m) in enumerate(zip(prompts, (9, 3, 4))):
+            eng.submit(Request(uid=uid, prompt=p, max_new=m))
+        return {u: r.output for u, r in eng.run(max_steps=200).items()}
+
+    assert run_once() == run_once()
+
+
+def test_prompt_truncation_flagged_and_warned_once(engine_parts):
+    cfg, params, dsg = engine_parts
+    eng = ServingEngine(cfg, params, dsg, n_slots=1, max_seq=64,
+                        prompt_bucket=16)
+    rng = np.random.default_rng(4)
+    for uid in range(2):     # two over-long prompts, ONE warning
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, cfg.vocab, 40,
+                                               dtype=np.int32),
+                           max_new=3))
+    eng.submit(Request(uid=2, prompt=rng.integers(0, cfg.vocab, 8,
+                                                  dtype=np.int32),
+                       max_new=3))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        done = eng.run(max_steps=100)
+    trunc_warns = [w for w in caught if "exceeds the largest bucket"
+                   in str(w.message)]
+    assert len(trunc_warns) == 1
+    assert done[0].truncated and done[1].truncated
+    assert not done[2].truncated
+
+
+def test_sampling_topp_collapse_matches_greedy(engine_parts):
+    """temperature > 0 with a vanishing nucleus keeps only the argmax
+    token, so the sampled stream must equal the greedy one."""
+    cfg, params, dsg = engine_parts
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, 12, dtype=np.int32)
+
+    def run_one(**kw):
+        eng = ServingEngine(cfg, params, dsg, n_slots=1, max_seq=64,
+                            prompt_bucket=16)
+        eng.submit(Request(uid=0, prompt=prompt, max_new=8, **kw))
+        return eng.run(max_steps=100)[0].output
+
+    greedy = run_one()
+    assert run_one(temperature=1.0, top_p=1e-6) == greedy
+    assert run_one(temperature=1.0, top_p=0.0) == greedy   # degenerate top_p
+
+
+def test_full_length_prompt_keeps_decode_headroom(engine_parts):
+    """prompt_bucket == max_seq must not admit a lane at pos == max_seq:
+    the largest bucket is capped one below max_seq so the first decode
+    write stays in cache range (the paged page table would otherwise be
+    indexed out of bounds)."""
+    cfg, params, dsg = engine_parts
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab, 64, dtype=np.int32)
+    for backend in ("dense", "paged"):
+        eng = ServingEngine(cfg, params, dsg, n_slots=1, max_seq=64,
+                            prompt_bucket=64, cache_backend=backend,
+                            page_size=8)
+        assert eng.prompt_bucket == 63
+        eng.submit(Request(uid=0, prompt=prompt, max_new=4))
+        done = eng.run(max_steps=50)
+        assert done[0].truncated and len(done[0].output) == 1
+
+
+def test_sampling_reproducible_across_engines(engine_parts):
+    cfg, params, dsg = engine_parts
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab, 10, dtype=np.int32)
+
+    def run_one(seed):
+        eng = ServingEngine(cfg, params, dsg, n_slots=2, max_seq=64,
+                            prompt_bucket=16, seed=seed)
+        eng.submit(Request(uid=0, prompt=prompt, max_new=10,
+                           temperature=1.5, top_p=0.95))
+        out = eng.run(max_steps=100)[0].output
+        assert all(0 <= t < cfg.vocab for t in out)
+        return out
+
+    assert run_one(seed=0) == run_one(seed=0)   # same key schedule
+
+
+def test_throughput_ignores_pre_run_queue_wait(engine_parts):
+    """throughput() spans first admission -> last finish; a request that
+    sat in the queue long before run() must not dilute it.  The
+    decode-only rate is reported separately."""
+    cfg, params, dsg = engine_parts
+    eng = ServingEngine(cfg, params, dsg, n_slots=1, max_seq=64,
+                        prompt_bucket=16)
+    rng = np.random.default_rng(8)
+    eng.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, 8,
+                                                  dtype=np.int32),
+                       max_new=5))
+    eng.queue[0].submitted = time.time() - 1_000.0   # stale queue wait
+    done = eng.run(max_steps=100)
+    toks = sum(len(r.output) for r in done.values())
+    # the old submit->finish span would cap throughput at toks/1000
+    assert eng.throughput() > toks / 500.0
+    assert eng.decode_tok_per_s() > 0.0
+    assert eng.latencies()[0] > 999.0    # latency still counts queue wait
