@@ -63,6 +63,10 @@ class ModelConfig:
     attn_bf16_scores: bool = False   # QK^T scores and probabilities kept
                                      # bf16 (softmax stats stay f32) —
                                      # halves attention HBM traffic
+    paged_attn_kernel: str = "auto"  # paged decode executor: "kernel"
+                                     # (Pallas paged_attention, interpret
+                                     # on CPU), "xla" (bounded gather
+                                     # fallback), "auto" (kernel on TPU)
     microbatches: int = 1            # gradient-accumulation microbatches
                                      # (remat stash lives per-microbatch:
                                      # peak activation memory / microbatches)

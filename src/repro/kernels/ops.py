@@ -1,40 +1,54 @@
 """jit'd public wrappers around the Pallas kernels.
 
 On CPU (this container) the kernels execute with interpret=True — the
-kernel body runs in Python per grid cell, validating logic and BlockSpec
+kernel body runs as a traced grid loop, validating logic and BlockSpec
 indexing exactly as the Mosaic compiler would see them.  On TPU the same
 call sites compile natively.
+
+`REPRO_INTERPRET=1` (or `=0`) overrides the backend sniffing, so
+tests/CI can force interpret mode explicitly (e.g. when a TPU is
+attached but the suite wants the interpreter's exact semantics).  The
+flag is read at trace time: flipping it after a wrapper has already
+compiled for a given shape will not retrace that shape.
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import drs_search, dsg_ffn, flash_attention as fa, ref
+from repro.kernels import (drs_search, dsg_ffn, flash_attention as fa,
+                           paged_attention)
 
 
-def _on_cpu() -> bool:
+def _interpret() -> bool:
+    """True when Pallas kernels should run in interpret mode.
+
+    REPRO_INTERPRET=1/0 wins when set; otherwise interpret iff the
+    default backend is CPU (no Mosaic compiler there)."""
+    env = os.environ.get("REPRO_INTERPRET", "")
+    if env != "":
+        return env != "0"
     return jax.default_backend() == "cpu"
 
 
 @partial(jax.jit, static_argnames=("bm",))
 def drs_project(x, r, bm: int = 128):
-    return drs_search.drs_project(x, r, bm=bm, interpret=_on_cpu())
+    return drs_search.drs_project(x, r, bm=bm, interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("block", "bm", "bf"))
 def drs_scores(fx, fw, block: int = 128, bm: int = 128, bf: int = 512):
     return drs_search.drs_scores(fx, fw, block=block, bm=bm, bf=bf,
-                                 interpret=_on_cpu())
+                                 interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("block", "bm", "bf"))
 def dsg_ffn_fwd(x, wg, wu, wd, token_mask, block: int = 128,
                 bm: int = 128, bf: int = 128):
     return dsg_ffn.dsg_ffn(x, wg, wu, wd, token_mask, block=block,
-                           bm=bm, bf=bf, interpret=_on_cpu())
+                           bm=bm, bf=bf, interpret=_interpret())
 
 
 def dsg_ffn_full(x, wg, wu, wd, r, fw, gamma: float, block: int = 128):
@@ -53,4 +67,20 @@ def dsg_ffn_full(x, wg, wu, wd, r, fw, gamma: float, block: int = 128):
 def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
                     block_k: int = 128):
     return fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
-                              block_k=block_k, interpret=_on_cpu())
+                              block_k=block_k, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("window", "num_pages"))
+def paged_decode_attention(q, k_new, v_new, k_pages, v_pages, page_table,
+                           pos, window: int = 0, num_pages: int = 0):
+    """Fused paged decode step (kernels/paged_attention.py): scatter the
+    new token's K/V through the page table, walk only the pages at or
+    below each lane's `pos`, flash-decode online softmax.
+
+    q (B, H, D), k_new/v_new (B, Kv, D), k_pages/v_pages (P, ps, Kv, D),
+    page_table (B, max_pages), pos (B,) -> (o (B, H, D), k_pages',
+    v_pages').  `num_pages` statically bounds the walk (0 = all); it
+    must exceed max(pos) // page_size."""
+    return paged_attention.paged_decode(
+        q, k_new, v_new, k_pages, v_pages, page_table, pos,
+        window=window, num_pages=num_pages, interpret=_interpret())

@@ -1,0 +1,223 @@
+"""Paged-attention decode (Pallas TPU): fused page-table scatter +
+depth-bounded page walk + flash-decode online softmax.
+
+Motivation (ROADMAP "Pallas gather kernel for decode"): the XLA paged
+decode path gathers the full `max_pages * page_size` logical window
+through the page table every step, so a lane 40 tokens deep still
+streams the worst-case window from HBM.  The DSG discipline — the
+executor must read *only* the activated subset — applies to the serving
+memory plane too: per decode step, a lane's live state is exactly the
+pages at or below `pos // page_size`.  This kernel walks only those.
+
+Layout (serving/kv_cache.py PagedBackend, one layer's slice):
+
+    k_pages / v_pages : (P, page_size, Kv, D)   physical page pool
+    page_table        : (B, max_pages) int32    logical -> physical
+    pos               : (B,) int32              per-lane write position
+                                                (== the new token's
+                                                absolute position)
+
+Grid: (B, Kv, n_pages), page index innermost so the per-(lane, kv-head)
+flash accumulators carry across the page walk in VMEM scratch.  The page
+table and per-lane depths ride as scalar prefetch, so BlockSpec index
+maps resolve logical->physical page ids before each block fetch:
+
+  * depth bounding — the K/V page index map clamps the logical page at
+    the lane's depth, `pt[b, min(j, pos[b] // ps)]`; every grid cell
+    past the depth maps to the same physical block as its predecessor,
+    and the pipeline's consecutive-identical-index elision skips the
+    copy, so pages past the lane's depth are never fetched from HBM.
+    `pl.when(j <= pos // ps)` skips their compute as well.
+  * fused scatter — the new token's K/V row is inserted into the
+    gathered tile in VMEM (row `pos % ps` of logical page `pos // ps`),
+    and that updated tile is the kernel's K/V-pool output block (the
+    pools are input/output aliased; the output index map pins the write
+    page for the whole walk, so exactly one page per (lane, kv head) is
+    written back).  Attention therefore sees the new token without a
+    separate XLA scatter pass.
+  * masking convention — row r of logical page j holds absolute
+    position t = j * ps + r; valid iff t <= pos (the new token attends
+    itself, matching the dense path's `kp <= qp`) and, for sliding
+    windows, t > pos - window.  The partial final page's tail (t > pos)
+    reads whatever the pool holds — junk is masked by position, exactly
+    as unwritten dense slots are.
+
+Lanes that share a page-table row (the scheduler mirrors retired lanes
+onto a donor lane) scatter identical rows to the same physical page, so
+the duplicate write-back is order-independent — the same argument that
+makes the XLA scatter's duplicate-index semantics safe.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(pt_ref, pos_ref, q_ref, kn_ref, vn_ref, kp_ref, vp_ref,
+            o_ref, ko_ref, vo_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, ps: int, window: int, n_pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    pos = pos_ref[b]
+    lp = pos // ps                   # lane's deepest live logical page
+    off = pos % ps                   # new token's row in that page
+    # write page clamped to the walk: with a correctly sized walk wp == lp;
+    # an undersized walk (caller bug) degrades to an identity write-back
+    # of page walk-1 instead of flushing uninitialized VMEM over live K/V
+    wp = jnp.minimum(lp, n_pages - 1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j <= lp)
+    def _compute():
+        # insert the new token's row into the gathered tile (VMEM): cast
+        # to the pool dtype FIRST so the attended values match the XLA
+        # scatter (`pool.at[pp, off].set(k_new.astype(pool.dtype))`)
+        row = jax.lax.broadcasted_iota(jnp.int32, (ps, 1), 0)
+        ins = (j == lp) & (row == off)
+        k_t = jnp.where(ins, kn_ref[0, 0][None, :].astype(ko_ref.dtype),
+                        kp_ref[0, :, 0, :])
+        v_t = jnp.where(ins, vn_ref[0, 0][None, :].astype(vo_ref.dtype),
+                        vp_ref[0, :, 0, :])
+
+        @pl.when(j == wp)
+        def _scatter():
+            # one page write-back per (lane, kv head): the output index
+            # map pins the physical write page across the whole walk
+            ko_ref[0, :, 0, :] = k_t
+            vo_ref[0, :, 0, :] = v_t
+
+        qg = q_ref[0, 0].astype(jnp.float32)            # (g, D)
+        s = jax.lax.dot_general(
+            qg, k_t.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (g, ps)
+        g = s.shape[0]
+        t_abs = j * ps + jax.lax.broadcasted_iota(jnp.int32, (g, ps), 1)
+        valid = t_abs <= pos
+        if window > 0:
+            valid &= t_abs > pos - window
+        s = jnp.where(valid, s, NEG)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v_t.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-20)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_decode(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                 k_pages: jax.Array, v_pages: jax.Array,
+                 page_table: jax.Array, pos: jax.Array, *,
+                 window: int = 0, num_pages: int = 0,
+                 interpret: bool = False):
+    """One fused decode step over the paged KV layout.
+
+    q (B, H, D) — the step's queries (RoPE already applied);
+    k_new/v_new (B, Kv, D) — the new token's K/V; k_pages/v_pages
+    (P, ps, Kv, D) — one layer's physical pools; page_table
+    (B, max_pages) int32; pos (B,) int32 per-lane write positions.
+    Returns (o (B, H, D), k_pages', v_pages') with the new rows
+    scattered into the pools.
+
+    num_pages statically bounds the page walk (the serving scheduler
+    passes its bucketed live-page bound so the grid shrinks with actual
+    batch depth); it must cover every lane: num_pages > max(pos) // ps.
+    An undersized bound cannot corrupt the pools (the write-back page is
+    clamped into the walk, degrading to an identity rewrite) but the
+    truncated window yields wrong attention output and the new token is
+    not persisted — the bound is the caller's contract.  Every logical
+    page 0..pos//ps of each lane must be mapped in the page table (the
+    backend's `ensure` guarantees this for live lanes; retired lanes
+    must be mirrored onto a live donor row).
+
+    Softmax statistics and the score tile are f32 regardless of
+    `attn_bf16_scores`: that flag is an HBM-traffic lever for the XLA
+    attention chain, and the kernel's score tile never leaves VMEM — so
+    parity with a bf16-scores XLA path is tolerance-level (standard
+    flash-kernel numerics), while the f32 path matches bitwise at the
+    token-stream level.
+    """
+    b, h, d = q.shape
+    n_p, ps, kv, _ = k_pages.shape
+    assert h % kv == 0, f"H={h} not a multiple of Kv={kv}"
+    g = h // kv
+    max_pages = page_table.shape[1]
+    walk = min(num_pages, max_pages) if num_pages else max_pages
+    q4 = q.reshape(b, kv, g, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,      # page_table, pos
+        grid=(b, kv, walk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bb, hh, jj, pt, ps_: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda bb, hh, jj, pt, ps_: (bb, hh, 0)),
+            pl.BlockSpec((1, 1, d), lambda bb, hh, jj, pt, ps_: (bb, hh, 0)),
+            # depth-clamped physical page: cells past the lane's depth
+            # alias their predecessor's block -> the pipeline elides the
+            # fetch (pages past `pos` never leave HBM)
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda bb, hh, jj, pt, ps_: (
+                             pt[bb, jnp.minimum(jj, ps_[bb] // ps)],
+                             0, hh, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda bb, hh, jj, pt, ps_: (
+                             pt[bb, jnp.minimum(jj, ps_[bb] // ps)],
+                             0, hh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bb, hh, jj, pt, ps_: (bb, hh, 0, 0)),
+            # write page pinned for the whole walk -> one write-back per
+            # (lane, kv head), flushed when the block index changes (the
+            # walk clamp mirrors the kernel's wp, see _kernel)
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda bb, hh, jj, pt, ps_: (
+                             pt[bb, jnp.minimum(ps_[bb] // ps, walk - 1)],
+                             0, hh, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda bb, hh, jj, pt, ps_: (
+                             pt[bb, jnp.minimum(ps_[bb] // ps, walk - 1)],
+                             0, hh, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),      # running max
+            pltpu.VMEM((g,), jnp.float32),      # running sum
+            pltpu.VMEM((g, d), jnp.float32),    # output accumulator
+        ],
+    )
+    o, kp, vp = pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / math.sqrt(d), ps=ps,
+                          window=window, n_pages=walk),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+            jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+            jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+        ],
+        # flat operand indices include the 2 scalar-prefetch args:
+        # 5 = k_pages, 6 = v_pages alias pool outputs 1, 2 (in-place)
+        input_output_aliases={5: 1, 6: 2},
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), pos.astype(jnp.int32),
+      q4, k_new, v_new, k_pages, v_pages)
+    return o.reshape(b, h, d), kp, vp

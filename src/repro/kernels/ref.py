@@ -45,6 +45,42 @@ def masked_matmul_ref(x: jax.Array, w: jax.Array, token_mask: jax.Array,
     return ym.reshape(m, f)
 
 
+def paged_decode_ref(q, k_new, v_new, k_pages, v_pages, page_table, pos,
+                     window: int = 0):
+    """Oracle for the paged decode kernel: scatter the new token through
+    the page table, gather the full logical window, masked softmax.
+
+    q (B, H, D), k_new/v_new (B, Kv, D), k_pages/v_pages (P, ps, Kv, D),
+    page_table (B, max_pages) int32, pos (B,) int32 -> (o, k_pages',
+    v_pages').  Mirrors the whole-window XLA paged branch of
+    models/attention.self_attention bit-for-bit (same scatter casts,
+    same `t <= pos` mask, full-precision softmax).
+    """
+    import math
+    b, h, d = q.shape
+    ps = k_pages.shape[1]
+    kv = k_pages.shape[2]
+    lanes = jnp.arange(b)
+    pp = page_table[lanes, pos // ps]
+    off = pos % ps
+    kp = k_pages.at[pp, off].set(k_new.astype(k_pages.dtype))
+    vp = v_pages.at[pp, off].set(v_new.astype(v_pages.dtype))
+    t = jnp.arange(page_table.shape[1] * ps)
+    k = kp[page_table[:, t // ps], t % ps]          # (B, T, Kv, D)
+    v = vp[page_table[:, t // ps], t % ps]
+    k = jnp.repeat(k, h // kv, axis=2)              # (B, T, H, D)
+    v = jnp.repeat(v, h // kv, axis=2)
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    valid = t[None, None, :] <= pos[:, None, None]
+    if window > 0:
+        valid &= t[None, None, :] > (pos[:, None, None] - window)
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bht,bthd->bhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype), kp, vp
+
+
 def flash_attention_ref(q, k, v, causal=True):
     """Oracle for the flash kernel: full-softmax attention.
     q (BH, S, D), k/v (BH, T, D)."""

@@ -11,7 +11,9 @@ more memory than they save, so the search stays online).  Two workloads:
     traffic through the overlap-admission ServingEngine (prompts and
     generation budgets drawn per request; per-slot admission/retirement).
     --cache-backend picks the KV-cache layout (dense worst-case or paged
-    with --page-size/--cache-tokens; see serving/kv_cache.py) and
+    with --page-size/--cache-tokens; see serving/kv_cache.py),
+    --paged-kernel picks the paged decode executor (Pallas
+    kernels/paged_attention.py vs bounded XLA gather), and
     --temperature/--top-p enable in-step nucleus sampling.
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
@@ -89,6 +91,11 @@ def main():
     ap.add_argument("--cache-tokens", type=int, default=None,
                     help="paged pool capacity in tokens "
                          "(default: slots * max-seq, the dense worst case)")
+    ap.add_argument("--paged-kernel", choices=("auto", "kernel", "xla"),
+                    default="auto",
+                    help="paged decode executor: Pallas kernel "
+                         "(kernels/paged_attention.py, interpret on CPU), "
+                         "bounded XLA gather, or auto (kernel on TPU)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-request sampling temperature (0 = greedy)")
     ap.add_argument("--top-p", type=float, default=1.0,
@@ -100,6 +107,7 @@ def main():
            else configs.get_config(args.arch))
     if args.no_dsg:
         cfg = cfg.replace(dsg=cfg.dsg._replace(enabled=False))
+    cfg = cfg.replace(paged_attn_kernel=args.paged_kernel)
     key = jax.random.PRNGKey(0)
     params = api.init_model(key, cfg)
     dsg = api.init_dsg(jax.random.fold_in(key, 1), params, cfg)

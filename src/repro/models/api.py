@@ -122,10 +122,11 @@ def prefill(params, dsg, cfg: ModelConfig, inputs: dict, cache,
 
 
 def decode_step(params, dsg, cfg: ModelConfig, token, state, pos,
-                mesh=None, batch_axes=None):
+                live_pages=None, mesh=None, batch_axes=None):
     if cfg.family in DECODER_FAMILIES:
         return transformer.decode_step(params, dsg, cfg, token, state, pos,
-                                       mesh=mesh, batch_axes=batch_axes)
+                                       live_pages=live_pages, mesh=mesh,
+                                       batch_axes=batch_axes)
     if cfg.family == "encdec":
         return encdec.decode_step(params, dsg, cfg, token, state, pos)
     if cfg.family == "xlstm":

@@ -166,6 +166,17 @@ def attend_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
 CHUNK_THRESHOLD = 1 << 24   # S*T above which the chunked path is used
 
 
+def _use_paged_kernel(mode: str) -> bool:
+    """Resolve the paged decode executor: "kernel" forces the Pallas
+    kernel (interpret mode on CPU), "xla" forces the bounded-gather
+    fallback, "auto" picks the kernel only where Mosaic compiles it."""
+    if mode == "auto":
+        return jax.default_backend() == "tpu"
+    if mode not in ("kernel", "xla"):
+        raise ValueError(f"unknown paged_attn_kernel mode {mode!r}")
+    return mode == "kernel"
+
+
 def self_attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
                    rope_theta: float, q_pos: jax.Array,
                    causal: bool = True, window: int = 0,
@@ -173,6 +184,8 @@ def self_attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
                    cache_pos: Optional[jax.Array] = None,
                    cache_kv_pos: Optional[jax.Array] = None,
                    page_table: Optional[jax.Array] = None,
+                   live_pages: Optional[int] = None,
+                   paged_kernel: str = "auto",
                    shard: str = "auto", bf16_scores: bool = False):
     """Self-attention over x (B, S, d).
 
@@ -186,14 +199,22 @@ def self_attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
     (out, updated_cache).
 
     Paged decode (serving/kv_cache.py PagedBackend): page_table is the
-    per-lane (B, max_pages) int32 map and cache={'k','v'} are the physical
-    page pools (P, page_size, Kv, D).  The new token is scattered through
-    the page table and the lane's logical window is gathered back for
-    attention; logical positions beyond the lane's depth read junk
+    per-lane (B, max_pages) int32 map, cache={'k','v'} are the physical
+    page pools (P, page_size, Kv, D), and cache_pos carries the per-lane
+    depths.  Two executors behind `paged_kernel` (see _use_paged_kernel):
+
+      * Pallas kernel (kernels/paged_attention.py): fused scatter +
+        depth-bounded page walk + flash decode — per lane, only pages at
+        or below `cache_pos` are read from HBM.
+      * XLA fallback: scatter through the page table, then gather the
+        leading `live_pages` pages (a static bound the scheduler sizes
+        to the deepest live lane, bucketed to limit recompiles) —
+        non-Pallas platforms stop paying worst-case whole-window reads.
+
+    In both, logical positions beyond a lane's depth read junk
     (unallocated rows point at the scratch page) but are masked by
     `kp <= qp` exactly as unwritten dense slots are.  Per-lane
-    single-token decode only — the seam the Pallas gather kernel will
-    replace with page-granular HBM reads.
+    single-token decode only.
     """
     b, s, _ = x.shape
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
@@ -217,15 +238,26 @@ def self_attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
             raise NotImplementedError(
                 "paged KV cache supports per-lane single-token decode only")
         ps_sz = cache["k"].shape[1]
+        max_pages = page_table.shape[1]
+        walk = min(live_pages, max_pages) if live_pages else max_pages
+        if _use_paged_kernel(paged_kernel):
+            from repro.kernels import ops as kernel_ops
+            o, pk, pv = kernel_ops.paged_decode_attention(
+                q[:, 0], k_new[:, 0], v_new[:, 0], cache["k"], cache["v"],
+                page_table, cache_pos, window=window, num_pages=walk)
+            out = jnp.einsum("bshk,hkd->bsd", o[:, None], p["wo"])
+            # pool sharding is deferred to the kernel's page addressing
+            return out, {"k": pk, "v": pv}
         lanes = jnp.arange(b)
         pp = page_table[lanes, cache_pos // ps_sz]
         off = cache_pos % ps_sz
         pk = cache["k"].at[pp, off].set(k_new[:, 0].astype(cache["k"].dtype))
         pv = cache["v"].at[pp, off].set(v_new[:, 0].astype(cache["v"].dtype))
-        t = jnp.arange(page_table.shape[1] * ps_sz)
+        t = jnp.arange(walk * ps_sz)
         k = pk[page_table[:, t // ps_sz], t % ps_sz]
         v = pv[page_table[:, t // ps_sz], t % ps_sz]
-        kv_pos = cache_kv_pos if cache_kv_pos is not None else t
+        kv_pos = (cache_kv_pos[..., :t.shape[0]]
+                  if cache_kv_pos is not None else t)
     elif jnp.ndim(cache_pos) == 1:
         # per-lane scatter: lane i writes its tokens at its own position
         upd = jax.vmap(
@@ -280,7 +312,8 @@ def self_attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
         return out, {"k": k_new, "v": v_new}
     if paged:
         # the updated pools go back as-is (the page table addresses them);
-        # pool sharding is deferred to the Pallas page-gather kernel
+        # pool sharding is deferred to a sharded variant of the paged
+        # decode kernel (kernels/paged_attention.py)
         return out, {"k": pk, "v": pv}
     if mode != "none":
         k = pctx.constrain(k, ba, "model", None, None)

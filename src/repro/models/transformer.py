@@ -135,7 +135,7 @@ def _ffn_apply(p: dict, dsg_l: Optional[dict], r: Optional[jax.Array],
 
 
 def _block(p: dict, dsg_l, r, x, cfg: ModelConfig, q_pos, cache, cache_pos,
-           page_table, mesh, batch_axes):
+           page_table, live_pages, mesh, batch_axes):
     from repro.parallel import context as pctx
 
     def boundary(t):
@@ -158,7 +158,8 @@ def _block(p: dict, dsg_l, r, x, cfg: ModelConfig, q_pos, cache, cache_pos,
         p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
         rope_theta=cfg.rope_theta, q_pos=q_pos, causal=True,
         window=cfg.window, cache=cache, cache_pos=cache_pos,
-        page_table=page_table, shard=cfg.attn_shard,
+        page_table=page_table, live_pages=live_pages,
+        paged_kernel=cfg.paged_attn_kernel, shard=cfg.attn_shard,
         bf16_scores=cfg.attn_bf16_scores)
     x = x + boundary(a)
     h = norm_apply(cfg.norm, p["ln_ffn"], x)
@@ -172,6 +173,7 @@ def _block(p: dict, dsg_l, r, x, cfg: ModelConfig, q_pos, cache, cache_pos,
 def forward(params: dict, dsg: Optional[dict], cfg: ModelConfig,
             tokens: jax.Array, *, prefix_embeds: Optional[jax.Array] = None,
             cache: Optional[dict] = None, pos0=0,
+            live_pages: Optional[int] = None,
             mesh: Optional[Mesh] = None, batch_axes=None,
             last_only: bool = False):
     """tokens (B, S) -> (logits, new_cache, aux_loss).
@@ -183,6 +185,10 @@ def forward(params: dict, dsg: Optional[dict], cfg: ModelConfig,
     is shared by all layers, so it rides outside the layer scan).
     pos0: scalar start position, or a per-lane (B,) vector for continuous
     batching (each batch lane decodes at its own depth).
+    live_pages: static page-walk bound for paged decode — the number of
+    leading logical pages that cover every lane's depth (the serving
+    scheduler computes it per step, bucketed so the decode jit compiles
+    a handful of variants); None/0 walks the full table width.
     """
     page_table = None
     if cache is not None and "page_table" in cache:
@@ -204,7 +210,8 @@ def forward(params: dict, dsg: Optional[dict], cfg: ModelConfig,
     def body(xc, scanned):
         p_l, dsg_l, cache_l = scanned
         y, new_cache, aux = _block(p_l, dsg_l, r, xc, cfg, q_pos, cache_l,
-                                   pos0, page_table, mesh, batch_axes)
+                                   pos0, page_table, live_pages, mesh,
+                                   batch_axes)
         return y, (new_cache, aux)
 
     if cfg.remat and cache is None:
@@ -275,10 +282,11 @@ def prefill(params, dsg, cfg: ModelConfig, tokens, cache,
 
 
 def decode_step(params, dsg, cfg: ModelConfig, token, cache, pos,
-                mesh=None, batch_axes=None):
+                live_pages=None, mesh=None, batch_axes=None):
     """One decode step.  token (B, 1), pos scalar or per-lane (B,) vector
-    -> (logits (B, V), cache)."""
+    -> (logits (B, V), cache).  live_pages: static paged-walk bound
+    (see forward)."""
     logits, new_cache, _ = forward(params, dsg, cfg, token, cache=cache,
-                                   pos0=pos, mesh=mesh,
-                                   batch_axes=batch_axes)
+                                   pos0=pos, live_pages=live_pages,
+                                   mesh=mesh, batch_axes=batch_axes)
     return logits[:, -1], new_cache

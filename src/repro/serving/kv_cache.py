@@ -31,7 +31,7 @@ reserved scratch page: unallocated page-table entries point at it, so
 gathers beyond a lane's depth read defined (masked-out) memory.  Free
 lanes never address it during decode — the engine mirrors the donor
 lane's page-table row for them, which keeps shared-threshold DRS
-deterministic (see scheduler._decode_cache_view).
+deterministic (see decode_view below).
 
 Out-of-pages policy: admission reserves the pages a request could ever
 need (`reserve_tokens`, normally `min(prompt_bucket + max_new, max_seq)`)
@@ -126,13 +126,41 @@ class BlockAllocator:
 # backends
 # ---------------------------------------------------------------------------
 
+def decode_view(handle: CacheHandle, free_mask=None, donor=None) -> dict:
+    """The per-step attention view of a handle (jit-friendly; the serving
+    engine calls this inside its jitted decode step).
+
+    No logical (B, Smax, ...) window is ever materialized: the paged view
+    is the physical pools + page table exactly as stored, and the
+    per-lane depths ride separately as the decode `pos` vector — the
+    attention executor (Pallas kernel or bounded XLA gather) walks only
+    the pages at or below each lane's depth.
+
+    free_mask/donor: a free paged lane's table row is all NULL — left
+    alone it would gather scratch-page junk (nondeterministic row-0
+    scores under shared-threshold DRS, since mirrored lanes also scatter
+    to one scratch slot and the duplicate-index winner is unspecified).
+    Mirroring the donor's page-table row instead makes free lanes exact
+    clones of the donor: they read the donor's K/V and re-write the
+    donor's own values to the donor's pages (identical duplicates are
+    order-independent), so paged decode is deterministic in every
+    threshold mode.
+    """
+    if handle.kind != "paged" or free_mask is None:
+        return handle.data
+    pt = handle.data["page_table"]
+    pt = jnp.where(free_mask[:, None], pt[donor], pt)
+    return {**handle.data, "page_table": pt}
+
+
 class _Backend:
     """Shared backend plumbing: the handle's `data` is always the exact
     pytree `transformer.forward` consumes, and resident bytes are just the
     bytes the handle keeps alive."""
 
-    def view_for_attention(self, handle: CacheHandle) -> dict:
-        return handle.data
+    def view_for_attention(self, handle: CacheHandle, free_mask=None,
+                           donor=None) -> dict:
+        return decode_view(handle, free_mask, donor)
 
     def resident_bytes(self, handle: CacheHandle) -> int:
         return sum(leaf.nbytes for leaf in jax.tree.leaves(handle.data))

@@ -64,6 +64,22 @@ def bucket_sizes(prompt_bucket: int, max_seq: int,
     bs = buckets if buckets is not None else DEFAULT_BUCKETS
     return tuple(sorted({min(b, cap) for b in bs}))
 
+def live_page_bound(max_pos: int, page_size: int, max_pages: int) -> int:
+    """Static paged-decode walk bound covering a batch whose deepest lane
+    writes at max_pos: pages needed, rounded up to a power of two so the
+    decode step compiles at most log2(max_pages) variants instead of one
+    per depth, capped at the page-table width."""
+    need = max_pos // page_size + 1
+    return min(1 << (need - 1).bit_length(), max_pages)
+
+
+def live_page_buckets(max_pages: int) -> tuple:
+    """Every bound live_page_bound can return for a given table width —
+    the set warm_decode pre-compiles and traffic models enumerate."""
+    return tuple(sorted({min(1 << i, max_pages)
+                         for i in range(max_pages.bit_length() + 1)}))
+
+
 _ADMIT_SALT = 0xADA117   # folds admission PRNG keys off the decode stream
 
 
@@ -195,22 +211,6 @@ class ServingEngine:
             return sample_tokens(logits[None], jax.random.split(k, 1),
                                  temp[None], top_p[None])[0]
 
-        def _decode_cache_view(c, free_mask, donor):
-            # a free paged lane's table row is all NULL: left alone it
-            # would gather scratch-page junk — nondeterministic row-0
-            # scores under shared-threshold DRS, since mirrored lanes also
-            # scatter to one scratch slot (duplicate-index winner is
-            # unspecified).  Mirroring the donor's page-table row instead
-            # makes free lanes exact clones of the donor: they read the
-            # donor's K/V and re-write its own values to its own pages
-            # (identical duplicates are order-independent), so paged
-            # decode is deterministic in every threshold mode.
-            if c.kind != "paged":
-                return c.data
-            pt = c.data["page_table"]
-            pt = jnp.where(free_mask[:, None], pt[donor], pt)
-            return {**c.data, "page_table": pt}
-
         def _restore_table(data, c):
             # the host mirror is the source of truth for the page table;
             # the lane-mirrored view must not escape the step
@@ -218,17 +218,19 @@ class ServingEngine:
                 return data
             return {**data, "page_table": c.data["page_table"]}
 
-        def _decode_greedy(p, d, tok, c, pos, free_mask, donor):
-            view = _decode_cache_view(c, free_mask, donor)
-            logits, data = api.decode_step(p, d, cfg, tok, view, pos)
+        def _decode_greedy(p, d, tok, c, pos, free_mask, donor, live_pages):
+            view = kv_cache.decode_view(c, free_mask, donor)
+            logits, data = api.decode_step(p, d, cfg, tok, view, pos,
+                                           live_pages=live_pages)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return nxt, CacheHandle(_restore_table(data, c), c.kind,
                                     c.page_size)
 
-        def _decode_sample(p, d, tok, c, pos, free_mask, donor, key, step,
-                          temps, top_ps):
-            view = _decode_cache_view(c, free_mask, donor)
-            logits, data = api.decode_step(p, d, cfg, tok, view, pos)
+        def _decode_sample(p, d, tok, c, pos, free_mask, donor, live_pages,
+                           key, step, temps, top_ps):
+            view = kv_cache.decode_view(c, free_mask, donor)
+            logits, data = api.decode_step(p, d, cfg, tok, view, pos,
+                                           live_pages=live_pages)
             keys = jax.random.split(jax.random.fold_in(key, step),
                                     tok.shape[0])
             nxt = sample_tokens(logits, keys, temps, top_ps)
@@ -238,13 +240,16 @@ class ServingEngine:
         # the engine cache handle is donated: the caller always rebinds
         # self.cache to the result, and donation lets XLA update one
         # lane / one token column in place instead of copying the whole
-        # cache every call
+        # cache every call.  live_pages is static: the paged decode jit
+        # compiles one variant per live-page bucket (see _live_pages).
         self._jit_prefill = jax.jit(_prefill)
         self._jit_first = jax.jit(_first_tok)
         self._jit_decode_greedy = jax.jit(_decode_greedy,
-                                          donate_argnums=(3,))
+                                          donate_argnums=(3,),
+                                          static_argnums=(7,))
         self._jit_decode_sample = jax.jit(_decode_sample,
-                                          donate_argnums=(3,))
+                                          donate_argnums=(3,),
+                                          static_argnums=(7,))
 
     # -- public API ---------------------------------------------------------
 
@@ -314,6 +319,44 @@ class ServingEngine:
             slot.pos = pb
             self._next_tok[i] = int(tok)
 
+    def _live_pages(self, pos: np.ndarray) -> int:
+        """Static page-walk bound for this step's paged decode
+        (live_page_bound over the DEEPEST lane; free lanes mirror an
+        active donor, so the active max covers them).  The attention
+        executor reads only these pages — the whole point of the paged
+        layout (ROADMAP: read only live pages)."""
+        if self.cache.kind != "paged":
+            return 0
+        return live_page_bound(int(pos.max()), self.cache.page_size,
+                               self.max_seq // self.cache.page_size)
+
+    def warm_decode(self, sample: bool = False):
+        """Pre-compile the jitted decode step for every static live-page
+        bucket this engine can reach (_live_pages yields the pow2 series
+        up to max_pages; dense engines have a single variant), so no
+        compile lands inside a measured decode window.  Dispatches real
+        decode steps against the idle cache: every lane mirrors donor 0
+        and scatters into the scratch page (paged) or into lane bytes the
+        next admission fully overwrites (dense) — no later gather
+        observes the writes."""
+        if self.cache.kind == "paged":
+            buckets = live_page_buckets(self.max_seq // self.cache.page_size)
+        else:
+            buckets = [0]
+        tok = jnp.zeros((self.n_slots, 1), jnp.int32)
+        pos = jnp.zeros(self.n_slots, jnp.int32)
+        free_mask = np.ones(self.n_slots, np.bool_)
+        temps = np.full(self.n_slots, 0.5, np.float32)
+        top_ps = np.ones(self.n_slots, np.float32)
+        for live in buckets:
+            _, self.cache = self._jit_decode_greedy(
+                self.params, self.dsg, tok, self.cache, pos, free_mask, 0,
+                live)
+            if sample:
+                _, self.cache = self._jit_decode_sample(
+                    self.params, self.dsg, tok, self.cache, pos, free_mask,
+                    0, live, self._base_key, 0, temps, top_ps)
+
     def step(self):
         self._admit()
         active = [i for i, s in enumerate(self.slots) if not s.free]
@@ -332,7 +375,7 @@ class ServingEngine:
         # with junk.  Mirrored lanes emit nothing; their K/V scribbles land
         # in a lane that the next admission fully overwrites (dense) or in
         # the donor's own pages as identical duplicates (paged — see
-        # _decode_cache_view) and are never observed.
+        # kv_cache.decode_view) and are never observed.
         donor = active[0]
         tok = np.array(self._next_tok, np.int32)
         pos = np.empty(self.n_slots, np.int32)
@@ -356,15 +399,16 @@ class ServingEngine:
         t0 = time.perf_counter()
         # PRNG keys depend only on (engine seed, step, lane), so mixing
         # greedy-only and sampling steps never shifts the key schedule
+        live = self._live_pages(pos)
         if (temps > 0).any():
             next_tok, self.cache = self._jit_decode_sample(
                 self.params, self.dsg, jnp.asarray(tok)[:, None],
-                self.cache, jnp.asarray(pos), free_mask, donor,
+                self.cache, jnp.asarray(pos), free_mask, donor, live,
                 self._base_key, self.steps, temps, top_ps)
         else:
             next_tok, self.cache = self._jit_decode_greedy(
                 self.params, self.dsg, jnp.asarray(tok)[:, None],
-                self.cache, jnp.asarray(pos), free_mask, donor)
+                self.cache, jnp.asarray(pos), free_mask, donor, live)
         self._next_tok = np.array(next_tok, np.int32)   # syncs the device
         self.decode_seconds += time.perf_counter() - t0
         self.decode_tokens += len(active)

@@ -34,25 +34,16 @@ def mixed_requests(vocab: int, n_requests: int, *, seed: int = 0,
     return reqs
 
 
-def run_workload(cfg, params, dsg, requests: List[Request], *,
-                 admission: str = "overlap", n_slots: int = 4,
-                 max_seq: int = 384, prompt_bucket: int = 256,
-                 cache_backend: str = "dense", page_size: int = 16,
-                 cache_tokens=None, seed: int = 0,
-                 max_steps: int = 100_000) -> Dict[str, float]:
-    """Run one engine over the request list; returns throughput/latency
-    stats.  A warmup admission+decode over throwaway requests triggers the
-    jit compiles first so the measurement is steady-state."""
-    eng = ServingEngine(cfg, params, dsg, n_slots=n_slots, max_seq=max_seq,
-                        prompt_bucket=prompt_bucket, admission=admission,
-                        cache_backend=cache_backend, page_size=page_size,
-                        cache_tokens=cache_tokens, seed=seed)
-    # warmup: compile every prefill bucket + the decode step; when the
-    # real traffic samples, warm the sampling decode/admission variants
-    # too (same compiled shapes for any temperature > 0), so no jit
-    # compile lands inside the measured window
-    vocab = cfg.vocab
-    warm_temp = max((r.temperature for r in requests), default=0.0)
+def warmup_engine(eng: ServingEngine, vocab: int,
+                  warm_temp: float = 0.0, max_steps: int = 100_000):
+    """Compile every shape a measured window can hit, then reset the
+    engine's counters: one throwaway admission per prompt bucket (the
+    prefill variants + the decode step), the sampling decode/admission
+    variants when the traffic samples (same compiled shapes for any
+    temperature > 0), and every static live-page bucket of the decode
+    step (paged engines recompile per pow2 depth bucket — see
+    ServingEngine._live_pages; traffic alone only reaches the buckets
+    its depths happen to cross)."""
     rng = np.random.default_rng(12345)
     for i, b in enumerate(eng.buckets):
         eng.submit(Request(uid=-1 - i,
@@ -64,10 +55,28 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
                                                dtype=np.int32),
                            max_new=2))
     eng.run(max_steps=max_steps)
+    eng.warm_decode(sample=warm_temp > 0)
     eng.done.clear()
     eng.steps = 0
     eng.decode_seconds = 0.0
     eng.decode_tokens = 0
+
+
+def run_workload(cfg, params, dsg, requests: List[Request], *,
+                 admission: str = "overlap", n_slots: int = 4,
+                 max_seq: int = 384, prompt_bucket: int = 256,
+                 cache_backend: str = "dense", page_size: int = 16,
+                 cache_tokens=None, seed: int = 0,
+                 max_steps: int = 100_000) -> Dict[str, float]:
+    """Run one engine over the request list; returns throughput/latency
+    stats.  warmup_engine triggers every jit compile first so the
+    measurement is steady-state."""
+    eng = ServingEngine(cfg, params, dsg, n_slots=n_slots, max_seq=max_seq,
+                        prompt_bucket=prompt_bucket, admission=admission,
+                        cache_backend=cache_backend, page_size=page_size,
+                        cache_tokens=cache_tokens, seed=seed)
+    warm_temp = max((r.temperature for r in requests), default=0.0)
+    warmup_engine(eng, cfg.vocab, warm_temp, max_steps=max_steps)
 
     for r in requests:
         eng.submit(r)
