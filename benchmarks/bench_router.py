@@ -1,0 +1,153 @@
+"""Front-end router policies: round_robin vs least_queue on skewed traffic.
+
+Every `n_replicas`-th request is HEAVY (long prompt, 40-56 generated
+tokens) and the rest are light (2-4 tokens) — the bursty pattern where
+static round-robin assignment collides every heavy request onto the same
+replica, which then grinds alone while its siblings sit idle.  The
+queue-depth-aware `least_queue` policy dispatches lazily (only to a
+replica with an uncommitted free lane), so fast replicas pull queued work
+the moment they drain and the heavy tail spreads by live load.
+
+Replicas are stepped sequentially in one process, so raw wall clock would
+hide the routing win (total work is identical by construction — the
+differential check below asserts the merged greedy token streams agree
+token-for-token).  The reported number is the MODELED data-parallel rate:
+per-replica busy time is recorded by the router, the makespan is the
+slowest replica's busy time (what N truly parallel replica groups would
+take), and parallel tok/s = total tokens / makespan — the same
+record-then-model discipline as bench_paged_decode's HBM-bytes gate.
+
+Gate (CI, smoke mode): least_queue >= 1.15x round_robin parallel tok/s;
+in practice the skewed pattern sits near 1.8-2x.  Emits BENCH_router.json.
+
+  PYTHONPATH=src python benchmarks/bench_router.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro import configs
+from repro.models import api
+from repro.serving.router import Router
+from repro.serving.workload import skewed_requests, warmup_router
+
+
+def _reset(router: Router):
+    """Steady-state reset between repeats (the engines stay compiled)."""
+    for eng in router.replicas:
+        eng.done.clear()
+        eng.steps = 0
+        eng.decode_seconds = 0.0
+        eng.decode_tokens = 0
+    router.reset_counters()
+
+
+def run(args) -> dict:
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    cfg = cfg.replace(dsg=cfg.dsg._replace(threshold_mode="topk"))
+    key = jax.random.PRNGKey(0)
+    params = api.init_model(key, cfg)
+    dsg = api.init_dsg(jax.random.fold_in(key, 1), params, cfg)
+
+    results = {}
+    for policy in ("round_robin", "least_queue"):
+        router = Router(cfg, params, dsg, n_replicas=args.replicas,
+                        policy=policy, n_slots=args.slots,
+                        max_seq=args.max_seq,
+                        prompt_bucket=args.prompt_bucket,
+                        cache_backend=args.cache_backend,
+                        page_size=args.page_size, seed=args.seed)
+        warmup_router(router, cfg.vocab)
+        best = None
+        for _ in range(args.repeats):
+            _reset(router)
+            # identical traffic for both policies (fresh Request objects)
+            reqs = skewed_requests(cfg.vocab, args.requests,
+                                   period=args.replicas, seed=args.seed)
+            for r in reqs:
+                router.submit(r)
+            done = router.run(max_steps=100_000)
+            if len(done) != len(reqs):
+                raise SystemExit(f"FAIL: {policy} finished {len(done)} of "
+                                 f"{len(reqs)} requests")
+            toks = sum(len(r.output) for r in done.values())
+            makespan = router.makespan_seconds()
+            st = {
+                "tokens": toks,
+                "makespan_s": makespan,
+                "parallel_tok_per_s": toks / max(makespan, 1e-9),
+                "busy_s": list(router.busy_seconds),
+                "replica_tokens": [e.decode_tokens
+                                   for e in router.replicas],
+                "heavy_per_replica": [
+                    sum(1 for u, r in router.dispatch_log
+                        if r == i and u % args.replicas == 0)
+                    for i in range(args.replicas)],
+                "outputs": {u: list(r.output) for u, r in done.items()},
+            }
+            if best is None or (st["parallel_tok_per_s"]
+                                > best["parallel_tok_per_s"]):
+                best = st      # best-of-N: washes out host timing noise
+        results[policy] = best
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false",
+                    help="use the full-size config (needs accelerators)")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--prompt-bucket", type=int, default=192)
+    ap.add_argument("--cache-backend", choices=("dense", "paged"),
+                    default="dense")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_router.json")
+    args = ap.parse_args()
+
+    results = run(args)
+    print(f"{'policy':>12} {'par tok/s':>10} {'makespan s':>11} "
+          f"{'busy s/replica':>24} {'heavy/replica':>14}")
+    for name, st in results.items():
+        busy = " ".join(f"{b:.2f}" for b in st["busy_s"])
+        heavy = " ".join(str(h) for h in st["heavy_per_replica"])
+        print(f"{name:>12} {st['parallel_tok_per_s']:>10.1f} "
+              f"{st['makespan_s']:>11.2f} {busy:>24} {heavy:>14}")
+
+    # explicit raises, not asserts: CI regression gates, survive python -O
+    if results["round_robin"]["outputs"] != results["least_queue"]["outputs"]:
+        raise SystemExit(
+            "FAIL: routing policies emit diverging merged token streams "
+            "(replica-count invariance broken)")
+    print("merged greedy streams identical across policies ✓")
+    speedup = (results["least_queue"]["parallel_tok_per_s"]
+               / results["round_robin"]["parallel_tok_per_s"])
+    print(f"least_queue / round_robin parallel throughput: {speedup:.2f}x")
+    if speedup < 1.15:
+        raise SystemExit(
+            f"FAIL: least_queue must reach >= 1.15x round_robin parallel "
+            f"tok/s on skewed traffic (got {speedup:.2f}x)")
+
+    payload = {name: {k: v for k, v in st.items() if k != "outputs"}
+               for name, st in results.items()}
+    payload["least_queue_vs_round_robin"] = speedup
+    payload["config"] = {"replicas": args.replicas, "slots": args.slots,
+                         "requests": args.requests,
+                         "cache_backend": args.cache_backend}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,11 @@ more memory than they save, so the search stays online).  Two workloads:
     --paged-kernel picks the paged decode executor (Pallas
     kernels/paged_attention.py vs bounded XLA gather), and
     --temperature/--top-p enable in-step nucleus sampling.
+    --replicas N runs the traffic through the front-end router
+    (serving/router.py) over N per-replica engines with --route-policy
+    round_robin / least_queue / least_pages; the modeled data-parallel
+    makespan (slowest replica's busy time) is reported alongside the
+    in-process wall clock.
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
       --smoke --batch 4 --prompt-len 32 --gen 16
@@ -83,6 +88,13 @@ def main():
     ap.add_argument("--prompt-bucket", type=int, default=256)
     ap.add_argument("--admission", choices=("overlap", "wave"),
                     default="overlap")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel serving replicas behind the "
+                         "front-end router (serving/router.py)")
+    ap.add_argument("--route-policy",
+                    choices=("round_robin", "least_queue", "least_pages"),
+                    default="least_queue",
+                    help="replica routing policy when --replicas > 1")
     ap.add_argument("--cache-backend", choices=("dense", "paged"),
                     default="dense",
                     help="KV-cache layout (serving/kv_cache.py)")
@@ -124,9 +136,13 @@ def main():
                              cache_backend=args.cache_backend,
                              page_size=args.page_size,
                              cache_tokens=args.cache_tokens,
+                             replicas=args.replicas,
+                             route_policy=args.route_policy,
                              seed=args.seed)
-        print(f"[{stats['admission']}/{stats['cache_backend']}] "
-              f"{stats['requests']} requests, "
+        tag = f"{stats['admission']}/{stats['cache_backend']}"
+        if args.replicas > 1:
+            tag += f"/{stats['replicas']}x {stats['route_policy']}"
+        print(f"[{tag}] {stats['requests']} requests, "
               f"{stats['tokens']} tokens in {stats['wall_s']:.2f}s = "
               f"{stats['tok_per_s']:.1f} tok/s "
               f"(decode {stats['decode_tok_per_s']:.1f} tok/s); latency "
@@ -134,6 +150,10 @@ def main():
               f"({stats['steps']} decode steps, "
               f"cache {stats['cache_bytes'] / 1e6:.2f} MB resident, "
               f"{stats['truncated']} truncated)")
+        if args.replicas > 1:
+            print(f"  modeled parallel makespan {stats['makespan_s']:.2f}s "
+                  f"= {stats['parallel_tok_per_s']:.1f} tok/s across "
+                  f"{stats['replicas']} replicas")
         return
 
     rng = np.random.default_rng(0)

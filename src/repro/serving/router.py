@@ -1,0 +1,300 @@
+"""Queue-depth-aware front-end router over per-replica serving engines.
+
+At pod scale the slot logic of `ServingEngine` runs once per
+data-parallel replica group (the ROADMAP's multi-replica item): every
+replica owns a full copy of the serving state — its params view, its
+cache backend (dense or paged, with its own BlockAllocator), and its
+PRNG stream — and a front-end `Router` decides which replica each
+incoming `Request` lands on.  Like Dynasparse's runtime rebalancing work
+as dynamic sparsity shifts per-input cost, routing reacts to LIVE state
+(queue depth, free lanes, free cache pages), not a static assignment:
+
+  * round_robin  — static cyclic assignment; dispatches unconditionally.
+                   The baseline every policy is benchmarked against, and
+                   the strawman: it cannot see that one replica drew all
+                   the expensive requests.
+  * least_queue  — pull-based: a request is dispatched only when some
+                   replica has an uncommitted free lane (free_slots >
+                   queue_depth), to the replica with the least
+                   outstanding work (queued + resident requests).
+                   Work-conserving under skewed traffic — fast replicas
+                   drain their lanes and pull more work while a slow
+                   replica keeps grinding its long generations
+                   (benchmarks/bench_router.py gates the speedup).
+  * least_pages  — admission-safe: dispatch only to a replica whose
+                   cache backend can reserve the request's worst-case
+                   page count RIGHT NOW (ServingEngine.can_admit_request),
+                   preferring the replica with the most unreserved free
+                   pages.  A dispatched request is therefore admitted on
+                   the replica's very next step — per-replica admission
+                   deferral never triggers (tests/test_router.py pins
+                   this).
+
+Requests a policy declines to place wait in the router's own FIFO queue
+and are re-offered every step; policies never reorder the queue, so
+dispatch is FIFO onto whichever replica the policy picks.
+
+Determinism: each replica is solo-deterministic (greedy decode under
+per-row DRS selection is bit-identical to a solo run regardless of lane
+or co-residents — pinned since PR 1), so the MERGED result dict keyed by
+request uid is invariant to the replica count and the routing policy
+under temperature=0.  Sampling draws from per-replica PRNG streams
+(replica r seeds at `seed + r`; replica 0 matches a bare engine), so
+sampled streams are reproducible for a fixed replica count + policy but
+not across them.
+
+Replicas run in-process and are stepped sequentially; per-replica busy
+time is accounted in `busy_seconds`, so `makespan_seconds()` models the
+data-parallel wall clock (the slowest replica) the same way
+bench_paged_decode models HBM traffic from recorded depths.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.serving.scheduler import Request, ServingEngine
+
+POLICIES = ("round_robin", "least_queue", "least_pages")
+
+
+class RoutePolicy:
+    """Pluggable routing policy: `select` returns the replica index to
+    dispatch `req` to, or None to leave it queued at the router until the
+    next step (deferral).  Policies read replica introspection only
+    (queue_depth/free_slots/free_pages/can_admit_request) — they never
+    mutate engine state."""
+
+    name = "abstract"
+
+    def select(self, router: "Router", req: Request) -> Optional[int]:
+        raise NotImplementedError
+
+
+class RoundRobin(RoutePolicy):
+    """Static cyclic assignment, blind to load; never defers."""
+
+    name = "round_robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def select(self, router, req):
+        r = self._next % len(router.replicas)
+        self._next += 1
+        return r
+
+
+class LeastQueue(RoutePolicy):
+    """Least outstanding work (queued + resident requests) among replicas
+    with an uncommitted free lane; ties break on the lowest index so
+    dispatch is deterministic."""
+
+    name = "least_queue"
+
+    def select(self, router, req):
+        best, best_score = None, None
+        for i, eng in enumerate(router.replicas):
+            if eng.free_slots() <= eng.queue_depth():
+                continue                   # every free lane already spoken for
+            score = eng.queue_depth() + eng.busy_slots()
+            if best_score is None or score < best_score:
+                best, best_score = i, score
+        return best
+
+
+class LeastPages(RoutePolicy):
+    """Most unreserved free cache pages among replicas that can admit the
+    request immediately (free lane AND the backend can cover its
+    worst-case page reservation).  Dispatch-to-admission is atomic from
+    the replica's point of view — its internal deferral path never runs.
+    Requires an empty replica queue so a second dispatch cannot ride on
+    pages the first one is about to reserve."""
+
+    name = "least_pages"
+
+    def select(self, router, req):
+        best, best_pages = None, None
+        for i, eng in enumerate(router.replicas):
+            if eng.queue_depth() or not eng.can_admit_request(req):
+                continue
+            pages = eng.free_pages()
+            if best_pages is None or pages > best_pages:
+                best, best_pages = i, pages
+        return best
+
+
+def get_policy(name: Union[str, RoutePolicy]) -> RoutePolicy:
+    """Factory: policy name -> fresh policy instance (round_robin carries
+    a cursor, so instances are per-router).  Objects with a `select`
+    method pass through."""
+    if hasattr(name, "select"):
+        return name
+    if name == "round_robin":
+        return RoundRobin()
+    if name == "least_queue":
+        return LeastQueue()
+    if name == "least_pages":
+        return LeastPages()
+    raise ValueError(f"unknown route policy {name!r}; "
+                     f"expected one of {POLICIES}")
+
+
+class Router:
+    """Front-end over N independent `ServingEngine` replicas.
+
+    Construction mirrors `ServingEngine` — `**engine_kw` is forwarded to
+    every replica (`n_slots`, `max_seq`, `prompt_bucket`, `admission`,
+    `cache_backend`, `page_size`, `cache_tokens`, ...).  `cache_backend`
+    must be a name, not a backend instance: a `PagedBackend` manages one
+    live handle, so each replica builds its own.  `param_views` optionally
+    supplies one params pytree per replica (e.g. per-device placements of
+    the same weights); by default all replicas share the caller's pytree —
+    data-parallel replicas hold identical weights either way.
+
+    Drive it exactly like an engine:
+
+        router = Router(cfg, params, dsg, n_replicas=4,
+                        policy="least_queue", n_slots=4)
+        for r in requests: router.submit(r)
+        done = router.run()        # {uid: Request}, replica-count
+                                   # invariant at temperature=0
+    """
+
+    def __init__(self, cfg, params, dsg, *, n_replicas: int = 1,
+                 policy: Union[str, RoutePolicy] = "least_queue",
+                 param_views: Optional[Sequence] = None, seed: int = 0,
+                 **engine_kw):
+        if n_replicas < 1:
+            raise ValueError("router needs at least one replica")
+        if hasattr(engine_kw.get("cache_backend"), "make"):
+            raise ValueError(
+                "pass cache_backend by name: backend instances manage one "
+                "live handle and cannot be shared across replicas")
+        if param_views is not None and len(param_views) != n_replicas:
+            raise ValueError(f"param_views must supply one params pytree "
+                             f"per replica ({n_replicas})")
+        self.policy = get_policy(policy)
+        self.replicas: List[ServingEngine] = [
+            ServingEngine(cfg,
+                          param_views[r] if param_views is not None
+                          else params,
+                          dsg, seed=seed + r, **engine_kw)
+            for r in range(n_replicas)]
+        self.queue: collections.deque = collections.deque()
+        self.dispatch_log: List[tuple] = []     # (uid, replica index)
+        self.steps = 0
+        self.busy_seconds = [0.0] * n_replicas
+
+    # -- request flow --------------------------------------------------------
+
+    def submit(self, req: Request):
+        req.submitted = req.submitted or time.time()
+        self.queue.append(req)
+
+    def _dispatch(self):
+        """Offer the queue head to the policy until it defers (FIFO:
+        requests are never dispatched around a deferred head)."""
+        while self.queue:
+            r = self.policy.select(self, self.queue[0])
+            if r is None:
+                return
+            req = self.queue.popleft()
+            self.replicas[r].submit(req)
+            self.dispatch_log.append((req.uid, r))
+
+    def step(self):
+        """One router tick: dispatch what the policy will place, then step
+        every replica that has work (sequentially in-process; per-replica
+        time lands in busy_seconds for the parallel makespan model)."""
+        self._dispatch()
+        progressed = False
+        for i, eng in enumerate(self.replicas):
+            if eng.queue or any(not s.free for s in eng.slots):
+                t0 = time.perf_counter()
+                eng.step()
+                self.busy_seconds[i] += time.perf_counter() - t0
+                progressed = True
+        if self.queue and not progressed:
+            # every replica is idle yet the policy still defers the head:
+            # retirements can never free what it is waiting for (e.g. a
+            # paged pool smaller than one request's reservation) — the
+            # router analogue of the engine's stalled-admission error
+            raise RuntimeError(
+                f"router stalled: {len(self.queue)} queued request(s) "
+                f"undispatchable by policy {self.policy.name!r} while all "
+                f"replicas are idle; raise cache_tokens or lower "
+                f"max_new/prompt_bucket")
+        self.steps += 1
+
+    def _busy(self) -> bool:
+        return bool(self.queue) or any(
+            eng.queue or any(not s.free for s in eng.slots)
+            for eng in self.replicas)
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        while self._busy() and self.steps < max_steps:
+            self.step()
+        return self.done()
+
+    def drain(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        """Finish every in-flight and queued request (no new submissions
+        assumed): dispatches the remaining router queue and steps every
+        replica until its lanes retire — run() under its retirement-
+        draining name, as on the engine."""
+        return self.run(max_steps=max_steps)
+
+    def done(self) -> Dict[int, Request]:
+        """Merged completed requests across replicas, keyed by uid — the
+        replica-count-invariant result surface (uids must be unique
+        across the submitted set)."""
+        out: Dict[int, Request] = {}
+        for eng in self.replicas:
+            out.update(eng.done)
+        return out
+
+    # -- introspection / stats ----------------------------------------------
+
+    def queue_depth(self) -> int:
+        """Router-level queue only; per-replica queues are the replicas'."""
+        return len(self.queue)
+
+    def makespan_seconds(self) -> float:
+        """Modeled data-parallel wall clock: replicas are stepped
+        sequentially in-process, so the slowest replica's accumulated
+        step time is what N truly parallel replicas would take."""
+        return max(self.busy_seconds)
+
+    def throughput(self) -> float:
+        """Merged end-to-end tok/s (first admission -> last finish across
+        all replicas); raises ValueError before any request finishes,
+        matching ServingEngine.throughput()."""
+        done = self.done()
+        if not done:
+            raise ValueError(
+                "throughput() needs at least one finished request; "
+                "run the router (or drain()) before reading stats")
+        toks = sum(len(r.output) for r in done.values())
+        t0 = min(r.started or r.submitted for r in done.values())
+        t1 = max(r.finished for r in done.values())
+        return toks / max(t1 - t0, 1e-9)
+
+    def reset_counters(self):
+        """Zero timing/step counters after warmup so measured windows are
+        steady-state (the router analogue of warmup_engine's reset)."""
+        self.steps = 0
+        self.busy_seconds = [0.0] * len(self.replicas)
+        self.dispatch_log.clear()
+
+    def replica_stats(self) -> List[dict]:
+        return [{
+            "replica": i,
+            "busy_s": self.busy_seconds[i],
+            "steps": eng.steps,
+            "decode_tokens": eng.decode_tokens,
+            "finished": len(eng.done),
+            "queue_depth": eng.queue_depth(),
+            "free_slots": eng.free_slots(),
+            "free_pages": eng.free_pages(),
+        } for i, eng in enumerate(self.replicas)]

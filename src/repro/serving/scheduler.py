@@ -165,6 +165,7 @@ class ServingEngine:
         self.dsg = dsg
         self.n_slots = n_slots
         self.max_seq = max_seq
+        self.page_size = page_size
         # a prompt filling all max_seq positions would admit a lane with
         # zero decode headroom (its first decode write lands out of cache
         # range), so the largest bucket always leaves one position free
@@ -254,7 +255,10 @@ class ServingEngine:
     # -- public API ---------------------------------------------------------
 
     def submit(self, req: Request):
-        req.submitted = time.time()
+        # keep an earlier stamp if one exists: a front-end router stamps
+        # submission time at ITS queue, and latency should span the whole
+        # wait, not just the slice after dispatch to this replica
+        req.submitted = req.submitted or time.time()
         self.queue.append(req)
 
     def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
@@ -262,6 +266,53 @@ class ServingEngine:
                 and self.steps < max_steps:
             self.step()
         return self.done
+
+    def drain(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        """Run until every queued request is admitted, decoded, and
+        retired (no new submissions assumed) — the retirement-draining
+        primitive a front-end router calls per replica."""
+        return self.run(max_steps=max_steps)
+
+    # -- introspection (read by serving/router.py routing policies) ----------
+
+    def queue_depth(self) -> int:
+        """Requests accepted by submit() but not yet admitted to a lane."""
+        return len(self.queue)
+
+    def free_slots(self) -> int:
+        """Decode lanes currently without a resident request."""
+        return sum(s.free for s in self.slots)
+
+    def busy_slots(self) -> int:
+        return self.n_slots - self.free_slots()
+
+    def free_pages(self) -> int:
+        """Unreserved free pages in the paged backend's BlockAllocator —
+        the headroom a router's `least_pages` policy balances on.  Dense
+        engines have no allocator; each free lane permanently owns a
+        max_seq stripe, reported in equivalent pages of this engine's
+        `page_size` so the number stays comparable across backends."""
+        if self.cache.kind == "paged":
+            return (self.backend.allocator.free_pages
+                    - int(self.backend._resv.sum()))
+        return self.free_slots() * (self.max_seq // max(self.page_size, 1))
+
+    def pages_needed(self, req: Request) -> int:
+        """Worst-case page reservation admitting `req` would take (the
+        same `min(bucket + max_new, max_seq)` extent _admit reserves)."""
+        need = min(self._bucket_for(len(req.prompt)) + req.max_new,
+                   self.max_seq)
+        if self.cache.kind == "paged":
+            return self.backend.pages_for(need)
+        return -(-need // max(self.page_size, 1))
+
+    def can_admit_request(self, req: Request) -> bool:
+        """True when `req`, submitted now with an empty queue ahead of it,
+        would be admitted by the next step: a lane is free and the cache
+        backend can cover its worst-case reservation."""
+        need = min(self._bucket_for(len(req.prompt)) + req.max_new,
+                   self.max_seq)
+        return self.free_slots() > 0 and self.backend.can_admit(need)
 
     # -- engine internals ---------------------------------------------------
 
@@ -434,9 +485,15 @@ class ServingEngine:
         """End-to-end tok/s over the span from first ADMISSION to last
         finish.  (An earlier version divided by the submit->finish span,
         which charges the engine for queue wait accrued before it ever
-        ran — e.g. requests submitted long before run().)"""
+        ran — e.g. requests submitted long before run().)
+
+        Raises ValueError before any request has finished: there is no
+        admission->finish window yet, and the old 0.0 return read as "the
+        engine is infinitely slow" in benchmark ratios."""
         if not self.done:
-            return 0.0
+            raise ValueError(
+                "throughput() needs at least one finished request; "
+                "run the engine (or drain()) before reading stats")
         toks = sum(len(r.output) for r in self.done.values())
         t0 = min(r.started or r.submitted for r in self.done.values())
         t1 = max(r.finished for r in self.done.values())
@@ -445,9 +502,14 @@ class ServingEngine:
     def decode_tok_per_s(self) -> float:
         """Decode-only rate: emitted tokens over time spent inside the
         jitted decode step (excludes admission/prefill and host
-        scheduling), the number to watch for cache-backend regressions."""
+        scheduling), the number to watch for cache-backend regressions.
+
+        Raises ValueError before any decode step has emitted a token
+        (same contract as throughput())."""
         if not self.decode_tokens:
-            return 0.0
+            raise ValueError(
+                "decode_tok_per_s() needs at least one decoded token; "
+                "run the engine before reading stats")
         return self.decode_tokens / max(self.decode_seconds, 1e-9)
 
     def latencies(self) -> np.ndarray:

@@ -13,6 +13,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.serving.router import Router
 from repro.serving.scheduler import Request, ServingEngine
 
 
@@ -31,6 +32,31 @@ def mixed_requests(vocab: int, n_requests: int, *, seed: int = 0,
         reqs.append(Request(uid=uid, prompt=prompt, max_new=max_new,
                             eos_id=eos_id, temperature=temperature,
                             top_p=top_p))
+    return reqs
+
+
+def skewed_requests(vocab: int, n_requests: int, *, period: int = 2,
+                    seed: int = 0,
+                    heavy_prompt=(96, 160), heavy_new=(40, 56),
+                    light_prompt=(8, 24), light_new=(2, 4),
+                    eos_id=None) -> List[Request]:
+    """Skewed mixed traffic: every `period`-th request is HEAVY (long
+    prompt, long generation), the rest are light.  With `period` equal to
+    the replica count, static round-robin routing funnels every heavy
+    request onto one replica — the hash-collision pathology bursty
+    production traffic hits — while queue-depth-aware routing spreads
+    them by live load (benchmarks/bench_router.py measures the gap)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for uid in range(n_requests):
+        pr, nr = ((heavy_prompt, heavy_new) if uid % period == 0
+                  else (light_prompt, light_new))
+        plen = int(rng.integers(pr[0], pr[1] + 1))
+        reqs.append(Request(uid=uid,
+                            prompt=rng.integers(0, vocab, plen,
+                                                dtype=np.int32),
+                            max_new=int(rng.integers(nr[0], nr[1] + 1)),
+                            eos_id=eos_id))
     return reqs
 
 
@@ -62,40 +88,90 @@ def warmup_engine(eng: ServingEngine, vocab: int,
     eng.decode_tokens = 0
 
 
+def warmup_router(router: Router, vocab: int, warm_temp: float = 0.0,
+                  max_steps: int = 100_000):
+    """Warm EVERY replica's prefill buckets and decode live-page variants
+    (each replica owns its own jitted callables — nothing is shared), then
+    zero the router's timing counters so measured makespans are
+    steady-state."""
+    for eng in router.replicas:
+        warmup_engine(eng, vocab, warm_temp, max_steps=max_steps)
+    router.reset_counters()
+
+
 def run_workload(cfg, params, dsg, requests: List[Request], *,
                  admission: str = "overlap", n_slots: int = 4,
                  max_seq: int = 384, prompt_bucket: int = 256,
                  cache_backend: str = "dense", page_size: int = 16,
-                 cache_tokens=None, seed: int = 0,
+                 cache_tokens=None, seed: int = 0, replicas: int = 1,
+                 route_policy: str = "least_queue",
                  max_steps: int = 100_000) -> Dict[str, float]:
-    """Run one engine over the request list; returns throughput/latency
-    stats.  warmup_engine triggers every jit compile first so the
-    measurement is steady-state."""
-    eng = ServingEngine(cfg, params, dsg, n_slots=n_slots, max_seq=max_seq,
-                        prompt_bucket=prompt_bucket, admission=admission,
-                        cache_backend=cache_backend, page_size=page_size,
-                        cache_tokens=cache_tokens, seed=seed)
+    """Run the request list through one engine (replicas=1, the historical
+    path) or a Router over `replicas` engines; returns throughput/latency
+    stats.  Warmup triggers every jit compile on every replica first so
+    the measurement is steady-state.  Router runs add makespan_s (modeled
+    data-parallel wall clock: slowest replica's busy time) and
+    parallel_tok_per_s (tokens / makespan) to the stats."""
+    engine_kw = dict(n_slots=n_slots, max_seq=max_seq,
+                     prompt_bucket=prompt_bucket, admission=admission,
+                     cache_backend=cache_backend, page_size=page_size,
+                     cache_tokens=cache_tokens)
     warm_temp = max((r.temperature for r in requests), default=0.0)
-    warmup_engine(eng, cfg.vocab, warm_temp, max_steps=max_steps)
+    if replicas == 1:
+        eng = ServingEngine(cfg, params, dsg, seed=seed, **engine_kw)
+        warmup_engine(eng, cfg.vocab, warm_temp, max_steps=max_steps)
+        runner, stepper = eng, eng
+    else:
+        runner = Router(cfg, params, dsg, n_replicas=replicas,
+                        policy=route_policy, seed=seed, **engine_kw)
+        warmup_router(runner, cfg.vocab, warm_temp, max_steps=max_steps)
+        stepper = None
 
     for r in requests:
-        eng.submit(r)
+        runner.submit(r)
     t0 = time.time()
-    done = eng.run(max_steps=max_steps)
+    done = runner.run(max_steps=max_steps)
     wall = time.time() - t0
     toks = sum(len(r.output) for r in done.values())
-    lat = eng.latencies()
-    return {
+    lat = np.array(sorted(r.finished - r.submitted for r in done.values()))
+    stats = {
         "admission": admission,
-        "cache_backend": eng.backend.kind,
-        "cache_bytes": int(eng.backend.resident_bytes(eng.cache)),
+        "cache_backend": cache_backend,
+        "replicas": replicas,
         "requests": len(done),
         "tokens": toks,
         "truncated": sum(r.truncated for r in done.values()),
         "wall_s": wall,
         "tok_per_s": toks / max(wall, 1e-9),
-        "decode_tok_per_s": eng.decode_tok_per_s(),
-        "steps": eng.steps,
         "p50_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
         "p95_s": float(np.percentile(lat, 95)) if len(lat) else 0.0,
     }
+    if replicas == 1:
+        stats.update({
+            "cache_bytes": int(stepper.backend.resident_bytes(stepper.cache)),
+            # decode_tok_per_s() raises before any token decodes; an empty
+            # request list is a legal (if pointless) workload, mirroring
+            # the `if len(lat)` guards above and the router branch below
+            "decode_tok_per_s": stepper.decode_tok_per_s()
+                                if stepper.decode_tokens else 0.0,
+            "steps": stepper.steps,
+        })
+    else:
+        stats.update({
+            "route_policy": runner.policy.name,
+            "cache_bytes": sum(int(e.backend.resident_bytes(e.cache))
+                               for e in runner.replicas),
+            "decode_tok_per_s": sum(e.decode_tokens
+                                    for e in runner.replicas)
+                                / max(sum(e.decode_seconds
+                                          for e in runner.replicas), 1e-9),
+            # total engine decode steps (what serve.py prints); one router
+            # tick steps up to `replicas` engines, reported separately
+            "steps": sum(e.steps for e in runner.replicas),
+            "router_steps": runner.steps,
+            "makespan_s": runner.makespan_seconds(),
+            "parallel_tok_per_s": toks / max(runner.makespan_seconds(),
+                                             1e-9),
+            "per_replica": runner.replica_stats(),
+        })
+    return stats

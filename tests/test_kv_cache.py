@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import configs
+from harness import smoke_cfg
 from repro.models import api
 from repro.serving.kv_cache import (NULL_PAGE, BlockAllocator, CacheHandle,
                                     OutOfPages, get_backend)
@@ -69,7 +69,7 @@ def test_cache_handle_pytree_roundtrip():
 
 @pytest.fixture(scope="module")
 def cfg():
-    return configs.get_smoke_config("internlm2-1.8b")
+    return smoke_cfg()
 
 
 def test_paged_backend_write_grow_free(cfg):

@@ -18,10 +18,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import configs
+from harness import (assert_streams_equal, engine_spec, make_engine_parts,
+                     mixed_traffic, run_and_collect)
 from repro.kernels import ops, paged_attention, ref
-from repro.models import api, attention as attn
-from repro.serving.scheduler import Request, ServingEngine
+from repro.models import attention as attn
 
 TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
@@ -200,32 +200,7 @@ def test_repro_interpret_env_override(monkeypatch):
 
 @pytest.fixture(scope="module")
 def engine_parts():
-    cfg = configs.get_smoke_config("internlm2-1.8b")
-    cfg = cfg.replace(dsg=cfg.dsg._replace(threshold_mode="topk"))
-    key = jax.random.PRNGKey(0)
-    params = api.init_model(key, cfg)
-    dsg = api.init_dsg(jax.random.fold_in(key, 1), params, cfg)
-    return cfg, params, dsg
-
-
-def _traffic(cfg, *, seed=23, n=6):
-    rng = np.random.default_rng(seed)
-    return [Request(uid=u,
-                    prompt=rng.integers(0, cfg.vocab,
-                                        int(rng.integers(4, 30)),
-                                        dtype=np.int32),
-                    max_new=int(rng.integers(3, 9)))
-            for u in range(n)]
-
-
-def _run_stream(cfg, params, dsg, reqs, **engine_kw):
-    eng = ServingEngine(cfg, params, dsg, n_slots=2, max_seq=64,
-                        prompt_bucket=32, admission="overlap", **engine_kw)
-    for r in reqs:
-        eng.submit(r)
-    done = eng.run(max_steps=400)
-    assert len(done) == len(reqs)
-    return eng, {u: r.output for u, r in done.items()}
+    return make_engine_parts()
 
 
 @pytest.mark.parametrize("page_size", [8, 16])
@@ -234,11 +209,13 @@ def test_kernel_engine_stream_matches_dense(engine_parts, page_size):
     pages are freed and reused — the Pallas-executor paged engine must
     emit the dense backend's exact token stream."""
     cfg, params, dsg = engine_parts
-    _, dense_out = _run_stream(cfg, params, dsg, _traffic(cfg))
+    dense_out = run_and_collect(engine_spec(*engine_parts),
+                                mixed_traffic(cfg))
     kcfg = cfg.replace(paged_attn_kernel="kernel")
-    eng, kernel_out = _run_stream(kcfg, params, dsg, _traffic(cfg),
-                                  cache_backend="paged",
-                                  page_size=page_size, cache_tokens=80)
-    assert kernel_out == dense_out
+    kernel_out, eng = run_and_collect(
+        engine_spec(kcfg, params, dsg, cache_backend="paged",
+                    page_size=page_size, cache_tokens=80),
+        mixed_traffic(cfg), return_engine=True)
+    assert_streams_equal(dense_out, kernel_out, "kernel engine vs dense")
     alloc = eng.backend.allocator
     assert alloc.free_pages == alloc.n_pages - alloc.reserved

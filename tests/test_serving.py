@@ -222,6 +222,31 @@ def test_sampling_reproducible_across_engines(engine_parts):
     assert run_one(seed=0) == run_one(seed=0)   # same key schedule
 
 
+def test_stats_raise_before_any_request_finishes(engine_parts):
+    """throughput() has no admission->finish window and decode_tok_per_s()
+    no emitted tokens before the first request completes — both must
+    raise a clear ValueError instead of returning a 0.0 that reads as
+    "infinitely slow" in benchmark ratios (the old silent fallback)."""
+    cfg, params, dsg = engine_parts
+    eng = ServingEngine(cfg, params, dsg, n_slots=1, max_seq=64,
+                        prompt_bucket=16)
+    with pytest.raises(ValueError, match="finished request"):
+        eng.throughput()
+    with pytest.raises(ValueError, match="decoded token"):
+        eng.decode_tok_per_s()
+    # still raising after submit (queued work is not finished work) ...
+    rng = np.random.default_rng(3)
+    eng.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, 8,
+                                                  dtype=np.int32),
+                       max_new=3))
+    with pytest.raises(ValueError, match="finished request"):
+        eng.throughput()
+    # ... and well-defined as soon as one request retires
+    eng.run(max_steps=50)
+    assert eng.throughput() > 0.0
+    assert eng.decode_tok_per_s() > 0.0
+
+
 def test_throughput_ignores_pre_run_queue_wait(engine_parts):
     """throughput() spans first admission -> last finish; a request that
     sat in the queue long before run() must not dilute it.  The

@@ -9,23 +9,17 @@ the paper's Appendix B inter-sample threshold sharing, which deliberately
 couples every lane to lane 0's scores; that coupling is a property of the
 selection rule, not of the engine's cache surgery, so it is pinned off
 here."""
-import jax
 import numpy as np
 import pytest
 
-from repro import configs
-from repro.models import api
+from harness import (assert_streams_equal, engine_spec, make_engine_parts,
+                     mixed_traffic, run_and_collect)
 from repro.serving.scheduler import Request, ServingEngine
 
 
 @pytest.fixture(scope="module")
 def engine_parts():
-    cfg = configs.get_smoke_config("internlm2-1.8b")
-    cfg = cfg.replace(dsg=cfg.dsg._replace(threshold_mode="topk"))
-    key = jax.random.PRNGKey(0)
-    params = api.init_model(key, cfg)
-    dsg = api.init_dsg(jax.random.fold_in(key, 1), params, cfg)
-    return cfg, params, dsg
+    return make_engine_parts()
 
 
 def _make_engine(cfg, params, dsg):
@@ -113,51 +107,34 @@ def test_staggered_stream_matches_solo_runs(engine_parts):
 # paged backend equivalence (admit -> decode -> retire -> readmit)
 # ---------------------------------------------------------------------------
 
-def _traffic(cfg, *, seed=23, n=6, temperature=0.0, top_p=1.0):
-    rng = np.random.default_rng(seed)
-    return [Request(uid=u,
-                    prompt=rng.integers(0, cfg.vocab,
-                                        int(rng.integers(4, 30)),
-                                        dtype=np.int32),
-                    max_new=int(rng.integers(3, 9)),
-                    temperature=temperature, top_p=top_p)
-            for u in range(n)]
-
-
-def _run_stream(cfg, params, dsg, reqs, **engine_kw):
-    eng = ServingEngine(cfg, params, dsg, n_slots=2, max_seq=64,
-                        prompt_bucket=32, admission="overlap", **engine_kw)
-    for r in reqs:
-        eng.submit(r)
-    done = eng.run(max_steps=400)
-    assert len(done) == len(reqs)
-    return eng, {u: r.output for u, r in done.items()}
-
-
 def test_paged_stream_matches_dense_bitwise(engine_parts):
     """6 requests through 2 slots: every lane is retired and readmitted,
     pages are allocated, freed, and reused — and every request's output is
     bit-identical to the dense engine's (same attention shapes, same
     values at positions < pos, everything else masked)."""
-    cfg, params, dsg = engine_parts
-    _, dense_out = _run_stream(cfg, params, dsg, _traffic(cfg))
+    spec = engine_spec(*engine_parts)
+    dense_out = run_and_collect(spec, mixed_traffic(spec["cfg"]))
     # worst-case lane reservation: min(bucket 32 + max_new 8, 64) = 40
     # tokens = 5 pages; 2 lanes -> 80-token pool (vs dense 2 * 64 = 128)
-    paged_eng, paged_out = _run_stream(
-        cfg, params, dsg, _traffic(cfg),
-        cache_backend="paged", page_size=8, cache_tokens=80)
-    assert paged_out == dense_out
+    paged_out, paged_eng = run_and_collect(
+        engine_spec(*engine_parts, cache_backend="paged", page_size=8,
+                    cache_tokens=80),
+        mixed_traffic(spec["cfg"]), return_engine=True)
+    assert_streams_equal(dense_out, paged_out, "paged vs dense")
     # every page returned to the free list after the stream drains
     alloc = paged_eng.backend.allocator
     assert alloc.free_pages == alloc.n_pages - alloc.reserved
 
 
 def test_paged_resident_bytes_smaller(engine_parts):
-    cfg, params, dsg = engine_parts
-    dense_eng, _ = _run_stream(cfg, params, dsg, _traffic(cfg, n=2))
-    paged_eng, _ = _run_stream(cfg, params, dsg, _traffic(cfg, n=2),
-                               cache_backend="paged", page_size=8,
-                               cache_tokens=80)
+    cfg = engine_parts[0]
+    _, dense_eng = run_and_collect(engine_spec(*engine_parts),
+                                   mixed_traffic(cfg, n=2),
+                                   return_engine=True)
+    _, paged_eng = run_and_collect(
+        engine_spec(*engine_parts, cache_backend="paged", page_size=8,
+                    cache_tokens=80),
+        mixed_traffic(cfg, n=2), return_engine=True)
     dense_b = dense_eng.backend.resident_bytes(dense_eng.cache)
     paged_b = paged_eng.backend.resident_bytes(paged_eng.cache)
     assert paged_b < dense_b
@@ -167,15 +144,15 @@ def test_paged_matches_dense_under_sampling(engine_parts):
     """Sampling goes through identical logits on both backends, and the
     PRNG key schedule depends only on (engine seed, step, lane) — so
     sampled streams must agree token-for-token too."""
-    cfg, params, dsg = engine_parts
+    cfg = engine_parts[0]
     kw = dict(temperature=0.8, top_p=0.9)
-    _, dense_out = _run_stream(cfg, params, dsg,
-                               _traffic(cfg, n=4, **kw), seed=7)
-    _, paged_out = _run_stream(cfg, params, dsg,
-                               _traffic(cfg, n=4, **kw), seed=7,
-                               cache_backend="paged", page_size=8,
-                               cache_tokens=80)
-    assert paged_out == dense_out
+    dense_out = run_and_collect(engine_spec(*engine_parts, seed=7),
+                                mixed_traffic(cfg, n=4, **kw))
+    paged_out = run_and_collect(
+        engine_spec(*engine_parts, seed=7, cache_backend="paged",
+                    page_size=8, cache_tokens=80),
+        mixed_traffic(cfg, n=4, **kw))
+    assert_streams_equal(dense_out, paged_out, "sampled paged vs dense")
 
 
 def test_paged_pool_for_one_lane_defers_admission(engine_parts):
@@ -183,11 +160,12 @@ def test_paged_pool_for_one_lane_defers_admission(engine_parts):
     admissions instead of corrupting or crashing: both requests finish
     with their solo outputs."""
     cfg, params, dsg = engine_parts
-    reqs = _traffic(cfg, n=2)
+    reqs = mixed_traffic(cfg, n=2)
     solo = {r.uid: _solo_output(cfg, params, dsg, r) for r in reqs}
     # one lane's reservation is 5 pages of 8; 6 pages can't fit two lanes
-    eng, out = _run_stream(cfg, params, dsg, _traffic(cfg, n=2),
-                           cache_backend="paged", page_size=8,
-                           cache_tokens=48)
-    assert out == solo
+    out, eng = run_and_collect(
+        engine_spec(*engine_parts, cache_backend="paged", page_size=8,
+                    cache_tokens=48),
+        mixed_traffic(cfg, n=2), return_engine=True)
+    assert_streams_equal(solo, out, "deferred admissions vs solo")
     assert eng.steps > 0

@@ -1,0 +1,133 @@
+"""Hypothesis property tests for the serving substrate: the paged
+backend's BlockAllocator (random alloc/free interleavings never
+double-assign a physical page and conserve the free-list count) and the
+scheduler's static-shape helpers live_page_bound / live_page_buckets /
+bucket_sizes (monotone, pow2-bucketed, always covering the write
+position).  These are host-side pure functions — no jit, no device —
+so hundreds of examples run in milliseconds."""
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt); skip, don't error
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kv_cache import BlockAllocator, OutOfPages
+from repro.serving.scheduler import (DEFAULT_BUCKETS, bucket_sizes,
+                                     live_page_bound, live_page_buckets)
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200)
+@given(st.integers(1, 24), st.integers(0, 3),
+       st.lists(st.tuples(st.booleans(), st.integers(0, 10)), max_size=50))
+def test_allocator_never_double_assigns_and_conserves(alloc_pages,
+                                                      reserved, ops):
+    """Any interleaving of allocs and frees: handed-out pages are unique,
+    never below `reserved`, disjoint from everything currently live, and
+    free_pages + live == allocatable at every step.  Requests beyond
+    capacity raise OutOfPages and leave the state untouched."""
+    n_pages = reserved + alloc_pages
+    a = BlockAllocator(n_pages, reserved=reserved)
+    live = []                                 # pages we hold, in FIFO order
+    for is_alloc, k in ops:
+        if is_alloc:
+            if k > a.free_pages:
+                before = (a.free_pages, sorted(live))
+                with pytest.raises(OutOfPages):
+                    a.alloc(k)
+                assert (a.free_pages, sorted(live)) == before
+            else:
+                got = a.alloc(k)
+                assert len(got) == len(set(got)) == k
+                assert all(reserved <= p < n_pages for p in got)
+                assert not set(got) & set(live)   # never double-assigned
+                live.extend(got)
+        elif live:
+            take = live[:min(k, len(live))]
+            del live[:len(take)]
+            if take:
+                a.free(take)
+        # conservation: every allocatable page is free or held, never both
+        assert a.free_pages + len(live) == alloc_pages
+        assert len(set(live)) == len(live)
+
+
+@settings(max_examples=100)
+@given(st.integers(1, 16), st.integers(1, 8))
+def test_allocator_rejects_double_free_and_foreign(alloc_pages, k):
+    a = BlockAllocator(alloc_pages + 1, reserved=1)
+    got = a.alloc(min(k, alloc_pages))
+    a.free(got)
+    with pytest.raises(ValueError):           # double free
+        a.free(got[:1])
+    with pytest.raises(ValueError):           # reserved id never allocated
+        a.free([0])
+    assert a.free_pages == alloc_pages
+
+
+# ---------------------------------------------------------------------------
+# live_page_bound / live_page_buckets
+# ---------------------------------------------------------------------------
+
+_PAGE_SIZES = st.sampled_from([4, 8, 16, 32])
+
+
+@settings(max_examples=200)
+@given(_PAGE_SIZES, st.integers(1, 64), st.data())
+def test_live_page_bound_covers_and_buckets(ps, max_pages, data):
+    """The static walk bound always covers the deepest write position,
+    never exceeds the page-table width, and lands in the pre-compiled
+    pow2 bucket set (so warm_decode has compiled it)."""
+    pos = data.draw(st.integers(0, max_pages * ps - 1))
+    b = live_page_bound(pos, ps, max_pages)
+    assert 1 <= b <= max_pages
+    assert b * ps > pos                       # bound covers the write
+    assert b in live_page_buckets(max_pages)  # warm_decode compiled it
+    assert b == max_pages or (b & (b - 1)) == 0   # pow2 unless capped
+
+
+@settings(max_examples=200)
+@given(_PAGE_SIZES, st.integers(1, 64), st.data())
+def test_live_page_bound_monotone(ps, max_pages, data):
+    """Deeper batches can only widen the walk: the bound is monotone in
+    max_pos, so a bound computed for the deepest lane covers every lane."""
+    hi = max_pages * ps - 1
+    p1 = data.draw(st.integers(0, hi))
+    p2 = data.draw(st.integers(p1, hi))
+    assert live_page_bound(p1, ps, max_pages) \
+        <= live_page_bound(p2, ps, max_pages)
+
+
+@settings(max_examples=100)
+@given(st.integers(1, 64))
+def test_live_page_buckets_membership(max_pages):
+    buckets = live_page_buckets(max_pages)
+    assert buckets == tuple(sorted(set(buckets)))       # sorted, unique
+    assert buckets[-1] == max_pages                     # cap is reachable
+    for b in buckets:
+        assert 1 <= b <= max_pages
+        assert b == max_pages or (b & (b - 1)) == 0
+
+
+# ---------------------------------------------------------------------------
+# bucket_sizes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200)
+@given(st.integers(1, 512), st.integers(2, 512))
+def test_bucket_sizes_capped_sorted_covering(prompt_bucket, max_seq):
+    """Prompt buckets are sorted, unique, never exceed the admission cap
+    min(prompt_bucket, max_seq - 1) (a full-cache prompt would leave no
+    decode headroom), and the largest bucket IS the cap whenever the cap
+    is within the default series — so every admissible prompt has a
+    bucket that holds it."""
+    cap = min(prompt_bucket, max_seq - 1)
+    bs = bucket_sizes(prompt_bucket, max_seq)
+    assert bs == tuple(sorted(set(bs)))
+    assert all(1 <= b <= cap for b in bs)
+    assert bs[-1] == min(cap, max(DEFAULT_BUCKETS))
+    # monotone in the cap: shrinking prompt_bucket never widens a bucket
+    smaller = bucket_sizes(max(prompt_bucket // 2, 1), max_seq)
+    assert smaller[-1] <= bs[-1]
