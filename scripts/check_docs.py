@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""Docs checks for CI: intra-repo markdown links + runnable quickstart.
+
+Two modes (both exit non-zero on failure):
+
+  python scripts/check_docs.py                  # link check
+  python scripts/check_docs.py --run-quickstart # run README's quickstart
+
+**Link check.** Every `[text](target)` in every tracked markdown file
+is resolved: `http(s)`/`mailto` targets are skipped, everything else
+must exist relative to the file (directories allowed), and `#anchor`
+fragments pointing into a markdown file must match a heading's
+GitHub-style slug.  Code fences are stripped first so exemplar snippets
+(SNIPPETS.md) cannot produce false positives.  No dependencies beyond
+the standard library.
+
+**Quickstart runner.** Extracts the first ```bash fence under the
+`## Quickstart` heading in README.md and runs it with
+`REPRO_INTERPRET=1` (Pallas kernels in interpret mode) so the
+documented one-liner is executed, not just trusted, on every push.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — not preceded by '!' (images would also be fine, but
+# keep the regex honest) and not a footnote/reference-style link
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"```.*?```", re.S)
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+
+
+def _md_files():
+    for path in sorted(REPO.rglob("*.md")):
+        if any(part.startswith(".") for part in path.relative_to(REPO).parts):
+            continue
+        yield path
+
+
+def _slugify(heading: str) -> str:
+    """GitHub's anchor slug: strip formatting, lowercase, keep word
+    chars/hyphens, spaces to hyphens."""
+    text = heading.strip().lower()
+    text = text.replace("`", "")
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(path: Path) -> set:
+    text = _FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    return {_slugify(h) for h in _HEADING_RE.findall(text)}
+
+
+def check_links() -> int:
+    bad = []
+    for path in _md_files():
+        text = _FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+        for target in _LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            rel = path.relative_to(REPO)
+            target, _, anchor = target.partition("#")
+            dest = path if not target else (path.parent / target).resolve()
+            if not dest.exists():
+                bad.append(f"{rel}: dead link -> {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if _slugify(anchor) not in _anchors(dest):
+                    bad.append(f"{rel}: dead anchor -> "
+                               f"{target or rel.name}#{anchor}")
+    for line in bad:
+        print(f"FAIL {line}")
+    if not bad:
+        n = len(list(_md_files()))
+        print(f"ok: intra-repo links resolve across {n} markdown files")
+    return 1 if bad else 0
+
+
+def run_quickstart() -> int:
+    readme = (REPO / "README.md").read_text(encoding="utf-8")
+    section = readme.split("## Quickstart", 1)
+    if len(section) < 2:
+        print("FAIL README.md has no '## Quickstart' section")
+        return 1
+    m = re.search(r"```(?:bash|sh)\n(.*?)```", section[1], re.S)
+    if not m:
+        print("FAIL no bash fence under README.md '## Quickstart'")
+        return 1
+    snippet = m.group(1).strip()
+    print(f"running README quickstart:\n{snippet}\n")
+    env = dict(os.environ, REPRO_INTERPRET="1")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(["bash", "-euo", "pipefail", "-c", snippet],
+                          cwd=REPO, env=env)
+    if proc.returncode:
+        print(f"FAIL quickstart exited {proc.returncode}")
+    else:
+        print("ok: README quickstart ran clean")
+    return proc.returncode
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--run-quickstart", action="store_true",
+                    help="execute the README quickstart snippet under "
+                         "REPRO_INTERPRET=1 instead of checking links")
+    args = ap.parse_args()
+    sys.exit(run_quickstart() if args.run_quickstart else check_links())
+
+
+if __name__ == "__main__":
+    main()

@@ -17,9 +17,11 @@ more memory than they save, so the search stays online).  Two workloads:
     --temperature/--top-p enable in-step nucleus sampling.
     --replicas N runs the traffic through the front-end router
     (serving/router.py) over N per-replica engines with --route-policy
-    round_robin / least_queue / least_pages; the modeled data-parallel
-    makespan (slowest replica's busy time) is reported alongside the
-    in-process wall clock.
+    round_robin / least_queue / least_pages, and --exec-mode picks the
+    replica executor (serving/parallel_exec.py): sequential in-process
+    stepping reports the MODELED data-parallel makespan (slowest
+    replica's busy time), threaded / sharded run the replica group in
+    true parallel and report the MEASURED makespan.
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
       --smoke --batch 4 --prompt-len 32 --gen 16
@@ -95,6 +97,14 @@ def main():
                     choices=("round_robin", "least_queue", "least_pages"),
                     default="least_queue",
                     help="replica routing policy when --replicas > 1")
+    ap.add_argument("--exec-mode",
+                    choices=("sequential", "threaded", "sharded"),
+                    default="sequential",
+                    help="replica executor (serving/parallel_exec.py): "
+                         "sequential in-process stepping (modeled "
+                         "makespan), threaded worker per replica, or one "
+                         "vmapped step over the stacked replica group "
+                         "(both: measured makespan)")
     ap.add_argument("--cache-backend", choices=("dense", "paged"),
                     default="dense",
                     help="KV-cache layout (serving/kv_cache.py)")
@@ -138,10 +148,12 @@ def main():
                              cache_tokens=args.cache_tokens,
                              replicas=args.replicas,
                              route_policy=args.route_policy,
+                             exec_mode=args.exec_mode,
                              seed=args.seed)
         tag = f"{stats['admission']}/{stats['cache_backend']}"
-        if args.replicas > 1:
-            tag += f"/{stats['replicas']}x {stats['route_policy']}"
+        if "route_policy" in stats:
+            tag += (f"/{stats['replicas']}x {stats['route_policy']}"
+                    f"/{stats['exec_mode']}")
         print(f"[{tag}] {stats['requests']} requests, "
               f"{stats['tokens']} tokens in {stats['wall_s']:.2f}s = "
               f"{stats['tok_per_s']:.1f} tok/s "
@@ -150,10 +162,12 @@ def main():
               f"({stats['steps']} decode steps, "
               f"cache {stats['cache_bytes'] / 1e6:.2f} MB resident, "
               f"{stats['truncated']} truncated)")
-        if args.replicas > 1:
-            print(f"  modeled parallel makespan {stats['makespan_s']:.2f}s "
+        if "makespan_s" in stats:
+            kind = ("measured" if stats["makespan_measured"]
+                    else "modeled")
+            print(f"  {kind} parallel makespan {stats['makespan_s']:.2f}s "
                   f"= {stats['parallel_tok_per_s']:.1f} tok/s across "
-                  f"{stats['replicas']} replicas")
+                  f"{stats['replicas']} replicas ({stats['exec_mode']})")
         return
 
     rng = np.random.default_rng(0)

@@ -14,6 +14,7 @@ from __future__ import annotations
 from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -27,6 +28,30 @@ def axes_for_mesh(mesh: Mesh) -> Axes:
     batch = tuple(n for n in ("pod", "data") if n in names) or None
     model = "model" if "model" in names else None
     return Axes(batch=batch, model=model)
+
+
+def replica_mesh(n_replicas: int, devices=None) -> Mesh:
+    """1-axis `replicas` mesh for data-parallel serving replica groups.
+
+    The sharded replica executor (serving/parallel_exec.py) stacks
+    per-replica decode operands and KV caches along a leading replica
+    axis and lays that axis over this mesh, so each replica's slice
+    lives — and its step computes — on its own device.  `n_replicas`
+    must divide the device count; by default the first `n_replicas`
+    local devices are used.
+    """
+    devs = list(devices if devices is not None else jax.local_devices())
+    if len(devs) < n_replicas:
+        raise ValueError(
+            f"replica_mesh needs {n_replicas} devices, "
+            f"have {len(devs)}")
+    return Mesh(np.array(devs[:n_replicas]), axis_names=("replicas",))
+
+
+def replica_stack_spec() -> P:
+    """PartitionSpec for a pytree stacked along a leading replica axis:
+    shard dim 0 over `replicas`, replicate the rest."""
+    return P("replicas")
 
 
 def model_shards(mesh: Mesh) -> int:

@@ -1,0 +1,549 @@
+"""Replica executors: how N serving replicas actually run.
+
+PR 4's Router modeled the data-parallel makespan — replicas were stepped
+one after another in-process and the slowest replica's accumulated busy
+time stood in for the parallel wall clock.  This module makes the
+execution strategy a pluggable choice (the ROADMAP's "real parallel
+replica execution" item), the same move Dynasparse makes when it maps
+dynamic-sparsity work onto parallel hardware at runtime instead of
+simulating the schedule:
+
+  * sequential — PR 4's behavior bit-for-bit: replicas step in index
+                 order inside the router tick, per-replica busy time is
+                 recorded, and `Router.makespan_seconds()` stays the
+                 MODELED number (max busy time).  The reference executor
+                 every other mode is differentially tested against.
+  * threaded   — one free-running worker thread per replica: each worker
+                 drives its own engine's jitted prefill/decode steps
+                 (dispatch overlaps device work; JAX releases the GIL
+                 inside compiled calls) while the router thread keeps
+                 dispatching queued requests against live introspection.
+                 Makespan switches to MEASURED wall clock.
+  * sharded    — replica steps fuse into ONE device dispatch: per-replica
+                 decode operands and KV caches are stacked along a
+                 leading replica axis and a single vmapped decode step
+                 runs the whole replica group (optionally laid out over a
+                 `replicas` mesh axis from `parallel/sharding.py`, so on
+                 a multi-device platform each stacked slice lives on its
+                 own device).  Makespan is MEASURED wall clock.
+
+Determinism: at `temperature=0` under per-row DRS selection the merged
+uid-keyed result stream is invariant to the executor choice — requests
+are dispatched whole and every replica is solo-deterministic, so WHERE
+and WHEN a request decodes never changes WHAT it decodes
+(tests/test_parallel_exec.py pins {sequential, threaded} x {dense,
+paged} x {1,2,3} replicas bitwise).  What the threaded executor gives up
+is placement reproducibility for SAMPLED traffic: dispatch decisions
+react to live timing, so `temperature>0` streams are only reproducible
+under the lockstep executors.
+
+The router dispatches against executor-owned `ReplicaProxy` objects, not
+engines: a proxy forwards introspection reads (queue_depth / free_slots
+/ free_pages / ...) and routes `submit` through the executor so worker
+threads are woken when work lands.  Direct engine access stays available
+as `proxy.engine` (and `Router.engines`) for warmup and stats code that
+runs while no drive is in flight.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import scheduler as sched
+
+EXEC_MODES = ("sequential", "threaded", "sharded")
+
+
+class ReplicaProxy:
+    """Executor-owned handle for one replica.
+
+    The router's policies and dispatch path talk to proxies only:
+    attribute reads and writes forward to the underlying `ServingEngine`
+    (so the whole introspection surface — `queue_depth()`,
+    `free_slots()`, `free_pages()`, `can_admit_request()`, ... — works
+    unchanged), while `submit` routes through the executor, which is
+    what lets the threaded executor wake the replica's worker the moment
+    work is dispatched to it."""
+
+    __slots__ = ("_executor", "index")
+
+    def __init__(self, executor: "ReplicaExecutor", index: int):
+        object.__setattr__(self, "_executor", executor)
+        object.__setattr__(self, "index", index)
+
+    @property
+    def engine(self):
+        """The wrapped ServingEngine (direct access for warmup/stats)."""
+        return self._executor.engines[self.index]
+
+    def submit(self, req):
+        """Dispatch `req` to this replica through the executor."""
+        self._executor.dispatch(self.index, req)
+
+    def __getattr__(self, name):
+        return getattr(self._executor.engines[self.index], name)
+
+    def __setattr__(self, name, value):
+        setattr(self._executor.engines[self.index], name, value)
+
+    def __repr__(self):
+        return (f"ReplicaProxy({self.index}, "
+                f"executor={self._executor.name!r})")
+
+
+class ReplicaExecutor:
+    """How a router's replica group executes.
+
+    Concrete executors implement either the lockstep protocol
+    (`lockstep=True`: the router tick calls `step_all(indices)` and every
+    named replica advances exactly one step before the tick returns) or
+    the free-running protocol (`lockstep=False`: `drive(router,
+    max_steps)` owns the whole run loop — workers step their replicas
+    whenever they have work while the router thread dispatches).
+
+    Timing contract: `busy_seconds[i]` accumulates replica i's stepping
+    time; `wall_seconds` accumulates real elapsed time across
+    `step_all`/`drive` calls.  `measured` tells the router which number
+    `makespan_seconds()` should trust — the modeled max-busy-time for
+    the sequential executor, the measured wall clock once replicas truly
+    overlap.  `Router.reset_counters()` calls `reset_timing()` after
+    warmup so measured windows are steady-state.
+    """
+
+    name = "abstract"
+    lockstep = True
+    #: True when replicas genuinely overlap, so wall_seconds (not the
+    #: modeled max busy time) is the data-parallel makespan.
+    measured = False
+
+    def __init__(self, engines: Sequence):
+        self.engines = list(engines)
+        self.proxies = [ReplicaProxy(self, i)
+                        for i in range(len(self.engines))]
+        self.busy_seconds = [0.0] * len(self.engines)
+        self.wall_seconds = 0.0
+
+    # -- dispatch ------------------------------------------------------------
+
+    def dispatch(self, index: int, req):
+        """Hand `req` to replica `index` (called from the router thread,
+        between ticks for lockstep executors)."""
+        self.engines[index].submit(req)
+
+    # -- execution -----------------------------------------------------------
+
+    def step_all(self, indices: Sequence[int]):
+        """Advance every replica in `indices` one step (lockstep only)."""
+        raise NotImplementedError
+
+    def drive(self, router, max_steps: int):
+        """Run the router's whole drain loop (free-running only)."""
+        raise NotImplementedError(
+            f"{self.name!r} is a lockstep executor; the router drives it "
+            f"through step_all()")
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    def reset_timing(self):
+        self.busy_seconds = [0.0] * len(self.engines)
+        self.wall_seconds = 0.0
+
+    def warm(self, sample: bool = False):
+        """Pre-compile any executor-owned jitted callables (the engines'
+        own are warmed by workload.warmup_engine).  No-op by default —
+        only the sharded executor compiles beyond the engines."""
+
+    def close(self):
+        """Release executor resources (worker threads).  Idempotent."""
+
+    @staticmethod
+    def has_work(eng) -> bool:
+        """Whether an engine has anything left to step: queued requests
+        or a resident (non-free) lane.  THE busy predicate — the router
+        and every executor share it."""
+        return bool(eng.queue) or any(not s.free for s in eng.slots)
+
+
+class SequentialExecutor(ReplicaExecutor):
+    """PR 4's in-process behavior, bit-for-bit: replicas step one after
+    another in replica-index order inside the router tick.  Makespan
+    stays MODELED (slowest replica's accumulated busy time) — stepping
+    is serialized, so wall clock would hide the data-parallel win."""
+
+    name = "sequential"
+    lockstep = True
+    measured = False
+
+    def step_all(self, indices):
+        t0 = time.perf_counter()
+        for i in indices:
+            ti = time.perf_counter()
+            self.engines[i].step()
+            self.busy_seconds[i] += time.perf_counter() - ti
+        self.wall_seconds += time.perf_counter() - t0
+
+
+class ThreadedExecutor(ReplicaExecutor):
+    """One free-running worker thread per replica.
+
+    Workers step their own engine whenever it has work (each engine owns
+    its jitted callables, and JAX releases the GIL inside compiled
+    dispatches, so one replica's host-side scheduling overlaps another's
+    device work).  The router thread stays the only dispatcher: it
+    re-offers the queue head to the policy against live introspection
+    and `dispatch()` wakes the chosen replica's worker.  There is no
+    per-tick barrier — a replica draining light requests never waits for
+    a sibling grinding a heavy generation.
+
+    Consequences, both pinned by tests/test_parallel_exec.py: greedy
+    (`temperature=0`) merged streams are bitwise identical to the
+    sequential executor (placement never changes content), and
+    `makespan_seconds()` is the MEASURED wall clock of the drive loop.
+    Sampled streams are NOT reproducible across runs (placement depends
+    on live timing — the engine's per-(step, lane) PRNG schedule sees
+    different admission steps), which is the documented trade.
+
+    Worker threads are daemons, started lazily at the first `drive()`
+    and parked between runs; call `close()` to join them (long-lived
+    apps), or let process exit reap them (tests, benchmarks).
+    """
+
+    name = "threaded"
+    lockstep = False
+    measured = True
+    # router safety-net poll: worker -> router wakes ride a sticky Event
+    # (set() is never lost, unlike a notify that fires while the router
+    # is mid-dispatch), so this only bounds recovery from a crashed
+    # worker or an external submit
+    _POLL_S = 0.1
+
+    def __init__(self, engines):
+        super().__init__(engines)
+        self._cond = threading.Condition(threading.RLock())
+        self._router_wake = threading.Event()
+        self._idle = [True] * len(self.engines)
+        self._errors: List[BaseException] = []
+        self._stop = False
+        self._threads: Optional[List[threading.Thread]] = None
+
+    # -- dispatch ------------------------------------------------------------
+
+    def dispatch(self, index, req):
+        with self._cond:
+            self.engines[index].submit(req)
+            self._cond.notify_all()
+
+    # -- worker protocol -----------------------------------------------------
+
+    def _ensure_threads(self):
+        """Start (or re-staff) one worker per replica.  A worker exits
+        when its engine raises (the error re-raises in drive), so a
+        later run() must replace dead workers; parked live workers are
+        kept."""
+        old = self._threads or [None] * len(self.engines)
+        if all(t is not None and t.is_alive() for t in old):
+            return
+        if not any(t is not None and t.is_alive() for t in old):
+            self._stop = False   # fully stopped: safe to restart
+        if self._stop:
+            return               # close() timed out on a live worker
+        self._threads = []
+        for i in range(len(self.engines)):
+            t = old[i]
+            if t is None or not t.is_alive():
+                t = threading.Thread(target=self._worker, args=(i,),
+                                     daemon=True, name=f"replica-{i}")
+                t.start()
+            self._threads.append(t)
+
+    def _worker(self, i: int):
+        eng = self.engines[i]
+        while True:
+            with self._cond:
+                while not self._stop and not self.has_work(eng):
+                    self._idle[i] = True
+                    self._router_wake.set()
+                    self._cond.wait()
+                if self._stop:
+                    return
+                self._idle[i] = False
+            while True:                      # step outside the lock
+                done0 = len(eng.done)
+                queued0 = len(eng.queue)
+                t0 = time.perf_counter()
+                try:
+                    eng.step()
+                except BaseException as e:   # surfaced by the drive loop
+                    with self._cond:
+                        self._errors.append(e)
+                        self._idle[i] = True
+                        self._router_wake.set()
+                    return
+                self.busy_seconds[i] += time.perf_counter() - t0
+                # wake the router only on events a policy can act on — a
+                # retirement freed a lane, or an admission drained this
+                # replica's queue.  Signaling every step would have the
+                # router thread and N workers convoying; the sticky Event
+                # keeps even an inconveniently-timed wake from being lost.
+                if (len(eng.done) != done0 or len(eng.queue) < queued0):
+                    self._router_wake.set()
+                # observe close() promptly even while work remains —
+                # engines are always between steps here, so stopping is
+                # state-safe
+                if self._stop or not self.has_work(eng):
+                    break                    # outer loop parks under lock
+
+    # -- drive ---------------------------------------------------------------
+
+    def drive(self, router, max_steps: int):
+        """Drain the router: dispatch from this (the router's) thread,
+        let workers free-run, return when no queued or resident work is
+        left.  Re-raises worker exceptions, and raises the router-stall
+        error when every worker is parked yet the policy still defers
+        the queue head (retirements can never unblock it)."""
+        self._ensure_threads()
+        t0 = time.perf_counter()
+        try:
+            with self._cond:
+                self._cond.notify_all()      # work may predate the drive
+            while router.steps < max_steps:
+                with self._cond:             # dispatch + parked check are
+                    if self._errors:         # atomic vs worker parking
+                        raise self._errors.pop(0)
+                    router._dispatch()       # safe: RLock is re-entrant
+                    all_parked = (all(self._idle) and
+                                  not any(self.has_work(e)
+                                          for e in self.engines))
+                    if all_parked and not router.queue:
+                        return               # drained
+                    if all_parked and router.queue:
+                        raise RuntimeError(
+                            f"router stalled: {len(router.queue)} queued "
+                            f"request(s) undispatchable by policy "
+                            f"{router.policy.name!r} while all replicas "
+                            f"are idle; raise cache_tokens or lower "
+                            f"max_new/prompt_bucket")
+                    router.steps += 1
+                # wait OUTSIDE the lock: the sticky Event means a wake
+                # that fires between the check and the wait still lands
+                self._router_wake.wait(timeout=self._POLL_S)
+                self._router_wake.clear()
+            # step budget exhausted with work left: stop the workers so
+            # the snapshot run() returns is stable (the lockstep
+            # executors also stop stepping at the cap); the next run()
+            # restarts fresh workers
+            self.close()
+        finally:
+            self.wall_seconds += time.perf_counter() - t0
+
+    def close(self):
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        threads = self._threads or ()
+        for t in threads:
+            t.join(timeout=5.0)
+        if any(t.is_alive() for t in threads):
+            # a worker is still inside a step; leave _stop set so it
+            # exits at the next step boundary instead of resurrecting —
+            # restarting now could put two workers on one engine
+            return
+        self._threads = None
+        self._stop = False
+
+
+class ShardedExecutor(ReplicaExecutor):
+    """One device dispatch for the whole replica group.
+
+    Each lockstep tick runs the host half of every active replica's step
+    (`ServingEngine.begin_step()`), stacks the decode operands and KV
+    caches along a leading replica axis, executes ONE jitted+vmapped
+    decode step (`scheduler.make_decode_fns` — the exact per-engine step
+    bodies, vmapped), then unstacks and commits per replica.  With a
+    mesh carrying a `replicas` axis (see `parallel.sharding.replica_mesh`)
+    the stacked operands are laid out over that axis, so each replica's
+    slice lives — and computes — on its own device; without a mesh the
+    vmapped step still collapses N dispatches into one, which is the win
+    when host dispatch dominates (many small replicas).
+
+    Every tick batches the FULL replica group: engines with no active
+    work that tick ride along on a dummy plan (all lanes mirror donor 0
+    at position 0 — `warm_decode`'s pattern: the writes land in the
+    scratch page / lane bytes the next admission fully overwrites, and
+    nothing observes them), so the group step compiles one variant per
+    (live-page bucket, sample) instead of one per active-subset size,
+    and `warm()` can pre-compile them all (warmup_router calls it).
+
+    Scope and cost, honestly: admission prefills still run per-replica
+    on the host between ticks, stack/unstack touches every cache byte
+    per tick (on a sharded mesh the slices are device-local so the
+    reshuffle does not cross devices), and the static paged walk bound
+    is the MAX over the group's live-page buckets (a wider bound reads
+    more masked pages; content is unchanged).  This executor is the
+    scaling skeleton for replica groups on real device meshes; the
+    threaded executor is the general-purpose parallel choice.
+    """
+
+    name = "sharded"
+    lockstep = True
+    measured = True
+
+    def __init__(self, engines, mesh=None):
+        super().__init__(engines)
+        self.mesh = mesh
+        self._sharding = None
+        if mesh is not None:
+            if "replicas" not in mesh.axis_names:
+                raise ValueError(
+                    "sharded executor needs a mesh with a 'replicas' "
+                    f"axis (parallel.sharding.replica_mesh), got axes "
+                    f"{mesh.axis_names}")
+            if self.engines and len(self.engines) % mesh.shape["replicas"]:
+                raise ValueError(
+                    f"{len(self.engines)} replicas do not divide the "
+                    f"mesh's replicas axis ({mesh.shape['replicas']})")
+            from jax.sharding import NamedSharding
+
+            from repro.parallel.sharding import replica_stack_spec
+            self._sharding = NamedSharding(mesh, replica_stack_spec())
+        e0 = self.engines[0]
+        greedy, sample = sched.make_decode_fns(e0.cfg)
+        shared_p = all(e.params is e0.params for e in self.engines)
+        shared_d = all(e.dsg is e0.dsg for e in self.engines)
+        p_ax = None if shared_p else 0
+        d_ax = None if shared_d else 0
+        # params/dsg are immutable across ticks — stack per-replica views
+        # ONCE here; only the caches restack per tick
+        self._params_in = (e0.params if shared_p
+                           else jax.tree_util.tree_map(
+                               lambda *ls: self._stack(list(ls)),
+                               *[e.params for e in self.engines]))
+        self._dsg_in = (e0.dsg if shared_d
+                        else jax.tree_util.tree_map(
+                            lambda *ls: self._stack(list(ls)),
+                            *[e.dsg for e in self.engines]))
+        self._jit_greedy = jax.jit(
+            jax.vmap(greedy, in_axes=(p_ax, d_ax, 0, 0, 0, 0, 0, None)),
+            donate_argnums=(3,), static_argnums=(7,))
+        self._jit_sample = jax.jit(
+            jax.vmap(sample,
+                     in_axes=(p_ax, d_ax, 0, 0, 0, 0, 0, None, 0, 0, 0, 0)),
+            donate_argnums=(3,), static_argnums=(7,))
+
+    def _stack(self, leaves):
+        x = jnp.stack(leaves)
+        if self._sharding is not None:
+            x = jax.device_put(x, self._sharding)
+        return x
+
+    def _dummy_plan(self, eng) -> sched.StepPlan:
+        """Ride-along operands for an engine with no active lanes this
+        tick: every lane mirrors donor 0 at position 0, so the decode
+        writes land where nothing ever reads (see class docstring)."""
+        n = eng.n_slots
+        return sched.StepPlan(
+            active=[], donor=0,
+            tok=np.zeros(n, np.int32), pos=np.zeros(n, np.int32),
+            free_mask=np.ones(n, np.bool_),
+            temps=np.zeros(n, np.float32), top_ps=np.ones(n, np.float32),
+            live_pages=0, sample=False)
+
+    def _group_step(self, plans, live: int, sample: bool):
+        """One vmapped decode over the full group's stacked operands;
+        returns host next-tokens, the stacked output caches, and the
+        dispatch wall time."""
+        engines = self.engines
+        t0 = time.perf_counter()
+        tok = self._stack([jnp.asarray(p.tok)[:, None] for p in plans])
+        pos = self._stack([jnp.asarray(p.pos) for p in plans])
+        free = np.stack([p.free_mask for p in plans])
+        donor = np.array([p.donor for p in plans], np.int32)
+        caches = jax.tree_util.tree_map(
+            lambda *ls: self._stack(list(ls)), *[e.cache for e in engines])
+        params, dsg = self._params_in, self._dsg_in
+        if sample:
+            keys = self._stack([e._base_key for e in engines])
+            steps = self._stack([jnp.int32(e.steps) for e in engines])
+            temps = np.stack([p.temps for p in plans])
+            top_ps = np.stack([p.top_ps for p in plans])
+            nxt, out = self._jit_sample(params, dsg, tok, caches, pos,
+                                        free, donor, live, keys, steps,
+                                        temps, top_ps)
+        else:
+            nxt, out = self._jit_greedy(params, dsg, tok, caches, pos,
+                                        free, donor, live)
+        nxt_host = np.array(nxt, np.int32)       # one device sync per tick
+        return nxt_host, out, time.perf_counter() - t0
+
+    def step_all(self, indices):
+        t0 = time.perf_counter()
+        idx = set(indices)
+        plans, real = [], []
+        for i, eng in enumerate(self.engines):
+            plan = eng.begin_step() if i in idx else None  # may raise
+            if plan is not None:
+                real.append(i)
+            plans.append(plan if plan is not None
+                         else self._dummy_plan(eng))
+        if not real:
+            self.wall_seconds += time.perf_counter() - t0
+            return
+        live = max(p.live_pages for p in plans)
+        sample = any(p.sample for p in plans)
+        nxt_host, out, _ = self._group_step(plans, live, sample)
+        wall = time.perf_counter() - t0
+        share = wall / len(real)
+        for i, plan in enumerate(plans):
+            # rebinding is uniform: dummy riders only got scratch
+            # scribbles in regions the next admission overwrites
+            self.engines[i].cache = jax.tree_util.tree_map(
+                lambda x: x[i], out)
+            if i in idx and plan.active:
+                # decode_seconds gets an equal share of the fused
+                # dispatch; busy_seconds gets the full wall (the replica
+                # was co-busy for all of it) — makespan uses
+                # wall_seconds either way
+                self.engines[i].commit_step(plan, nxt_host[i], share)
+                self.busy_seconds[i] += wall
+        self.wall_seconds += wall
+
+    def warm(self, sample: bool = False):
+        """Pre-compile the group step for every live-page bucket this
+        executor can reach (the executor analogue of
+        `ServingEngine.warm_decode`; warmup_router calls it so no vmapped
+        compile lands inside a measured window).  All-dummy plans: the
+        dispatched writes are never observed."""
+        e0 = self.engines[0]
+        if e0.cache.kind == "paged":
+            buckets = sched.live_page_buckets(
+                e0.max_seq // e0.cache.page_size)
+        else:
+            buckets = [0]
+        plans = [self._dummy_plan(e) for e in self.engines]
+        for live in buckets:
+            for do_sample in ({False, sample}):
+                nxt, out, _ = self._group_step(plans, live, do_sample)
+                for i in range(len(self.engines)):
+                    self.engines[i].cache = jax.tree_util.tree_map(
+                        lambda x: x[i], out)
+
+
+def get_executor(mode, engines, *, mesh=None) -> ReplicaExecutor:
+    """Executor factory: name -> fresh executor over `engines`.  Objects
+    already implementing the executor protocol pass through (custom
+    strategies, e.g. a process pool)."""
+    if isinstance(mode, ReplicaExecutor):
+        return mode
+    if mode == "sequential":
+        return SequentialExecutor(engines)
+    if mode == "threaded":
+        return ThreadedExecutor(engines)
+    if mode == "sharded":
+        return ShardedExecutor(engines, mesh=mesh)
+    raise ValueError(f"unknown exec mode {mode!r}; "
+                     f"expected one of {EXEC_MODES}")

@@ -37,16 +37,21 @@ dispatch is FIFO onto whichever replica the policy picks.
 Determinism: each replica is solo-deterministic (greedy decode under
 per-row DRS selection is bit-identical to a solo run regardless of lane
 or co-residents — pinned since PR 1), so the MERGED result dict keyed by
-request uid is invariant to the replica count and the routing policy
-under temperature=0.  Sampling draws from per-replica PRNG streams
-(replica r seeds at `seed + r`; replica 0 matches a bare engine), so
-sampled streams are reproducible for a fixed replica count + policy but
-not across them.
+request uid is invariant to the replica count, the routing policy, AND
+the executor under temperature=0.  Sampling draws from per-replica PRNG
+streams (replica r seeds at `seed + r`; replica 0 matches a bare
+engine), so sampled streams are reproducible for a fixed replica count +
+policy under the lockstep executors, but not across configurations (and
+not at all under the free-running threaded executor, where placement
+follows live timing).
 
-Replicas run in-process and are stepped sequentially; per-replica busy
-time is accounted in `busy_seconds`, so `makespan_seconds()` models the
-data-parallel wall clock (the slowest replica) the same way
-bench_paged_decode models HBM traffic from recorded depths.
+HOW replicas run is a pluggable executor (serving/parallel_exec.py,
+`exec_mode=`): "sequential" steps them in-process one after another and
+`makespan_seconds()` MODELS the data-parallel wall clock from the
+slowest replica's busy time (PR 4's record-then-model discipline);
+"threaded" free-runs one worker thread per replica and "sharded" fuses
+the replica group into one vmapped device step — under both,
+`makespan_seconds()` is the MEASURED wall clock.
 """
 from __future__ import annotations
 
@@ -54,6 +59,9 @@ import collections
 import time
 from typing import Dict, List, Optional, Sequence, Union
 
+import jax
+
+from repro.serving.parallel_exec import EXEC_MODES, get_executor
 from repro.serving.scheduler import Request, ServingEngine
 
 POLICIES = ("round_robin", "least_queue", "least_pages")
@@ -153,18 +161,30 @@ class Router:
     the same weights); by default all replicas share the caller's pytree —
     data-parallel replicas hold identical weights either way.
 
+    `exec_mode` picks how the replica group executes
+    (serving/parallel_exec.py): "sequential" (default, PR 4's stepped
+    in-process behavior, modeled makespan), "threaded" (one free-running
+    worker thread per replica, measured makespan), or "sharded" (one
+    vmapped device step over the stacked replica group, measured
+    makespan; `mesh=` optionally lays the stack over a `replicas` mesh
+    axis).  Under "threaded", when multiple local devices exist and no
+    `param_views` are given, each replica's params are placed on its own
+    device (`jax.local_devices()[r % n]`) so replica steps overlap on
+    real hardware instead of queueing on one device.
+
     Drive it exactly like an engine:
 
         router = Router(cfg, params, dsg, n_replicas=4,
                         policy="least_queue", n_slots=4)
         for r in requests: router.submit(r)
-        done = router.run()        # {uid: Request}, replica-count
-                                   # invariant at temperature=0
+        done = router.run()        # {uid: Request}, replica-count AND
+                                   # executor invariant at temperature=0
     """
 
     def __init__(self, cfg, params, dsg, *, n_replicas: int = 1,
                  policy: Union[str, RoutePolicy] = "least_queue",
                  param_views: Optional[Sequence] = None, seed: int = 0,
+                 exec_mode: str = "sequential", mesh=None,
                  **engine_kw):
         if n_replicas < 1:
             raise ValueError("router needs at least one replica")
@@ -175,17 +195,38 @@ class Router:
         if param_views is not None and len(param_views) != n_replicas:
             raise ValueError(f"param_views must supply one params pytree "
                              f"per replica ({n_replicas})")
+        if exec_mode not in EXEC_MODES:
+            # executor instances are bound to THEIR engines; the router
+            # builds its own, so it only takes mode names (swap
+            # router.executor after construction for custom strategies)
+            raise ValueError(f"unknown exec mode {exec_mode!r}; "
+                             f"expected one of {EXEC_MODES}")
         self.policy = get_policy(policy)
-        self.replicas: List[ServingEngine] = [
+        dsg_views = [dsg] * n_replicas
+        if (exec_mode == "threaded" and param_views is None
+                and jax.local_device_count() > 1):
+            # data-parallel placement: replica r's weights (and therefore
+            # its jitted steps — computation follows committed inputs)
+            # live on device r, so worker threads overlap on hardware
+            devs = jax.local_devices()
+            param_views = [jax.device_put(params, devs[r % len(devs)])
+                           for r in range(n_replicas)]
+            if dsg is not None:
+                dsg_views = [jax.device_put(dsg, devs[r % len(devs)])
+                             for r in range(n_replicas)]
+        self.engines: List[ServingEngine] = [
             ServingEngine(cfg,
                           param_views[r] if param_views is not None
                           else params,
-                          dsg, seed=seed + r, **engine_kw)
+                          dsg_views[r], seed=seed + r, **engine_kw)
             for r in range(n_replicas)]
+        self.executor = get_executor(exec_mode, self.engines, mesh=mesh)
+        # the dispatch + introspection surface policies see: executor-
+        # owned proxies (attribute access forwards to the engines)
+        self.replicas = self.executor.proxies
         self.queue: collections.deque = collections.deque()
         self.dispatch_log: List[tuple] = []     # (uid, replica index)
         self.steps = 0
-        self.busy_seconds = [0.0] * n_replicas
 
     # -- request flow --------------------------------------------------------
 
@@ -205,18 +246,22 @@ class Router:
             self.dispatch_log.append((req.uid, r))
 
     def step(self):
-        """One router tick: dispatch what the policy will place, then step
-        every replica that has work (sequentially in-process; per-replica
-        time lands in busy_seconds for the parallel makespan model)."""
+        """One lockstep router tick: dispatch what the policy will place,
+        then have the executor advance every replica that has work one
+        step (per-replica time lands in the executor's busy_seconds).
+        Free-running executors have no tick — drive them with
+        run()/drain()."""
+        if not self.executor.lockstep:
+            raise RuntimeError(
+                f"executor {self.executor.name!r} free-runs replicas from "
+                f"worker threads; drive it with run() or drain(), not "
+                f"step()")
         self._dispatch()
-        progressed = False
-        for i, eng in enumerate(self.replicas):
-            if eng.queue or any(not s.free for s in eng.slots):
-                t0 = time.perf_counter()
-                eng.step()
-                self.busy_seconds[i] += time.perf_counter() - t0
-                progressed = True
-        if self.queue and not progressed:
+        active = [i for i, eng in enumerate(self.engines)
+                  if self.executor.has_work(eng)]
+        if active:
+            self.executor.step_all(active)
+        elif self.queue:
             # every replica is idle yet the policy still defers the head:
             # retirements can never free what it is waiting for (e.g. a
             # paged pool smaller than one request's reservation) — the
@@ -230,12 +275,18 @@ class Router:
 
     def _busy(self) -> bool:
         return bool(self.queue) or any(
-            eng.queue or any(not s.free for s in eng.slots)
-            for eng in self.replicas)
+            self.executor.has_work(eng) for eng in self.engines)
 
     def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
-        while self._busy() and self.steps < max_steps:
-            self.step()
+        """Drive every submitted request to completion and return the
+        merged `{uid: Request}` results.  Lockstep executors are ticked
+        through `step()`; free-running executors own the loop via
+        `executor.drive()`."""
+        if self.executor.lockstep:
+            while self._busy() and self.steps < max_steps:
+                self.step()
+        elif self._busy():
+            self.executor.drive(self, max_steps)
         return self.done()
 
     def drain(self, max_steps: int = 10_000) -> Dict[int, Request]:
@@ -250,9 +301,15 @@ class Router:
         replica-count-invariant result surface (uids must be unique
         across the submitted set)."""
         out: Dict[int, Request] = {}
-        for eng in self.replicas:
+        for eng in self.engines:
             out.update(eng.done)
         return out
+
+    def close(self):
+        """Release executor resources (the threaded executor's worker
+        threads).  Safe to call more than once; the router remains
+        usable — workers restart at the next run()."""
+        self.executor.close()
 
     # -- introspection / stats ----------------------------------------------
 
@@ -260,11 +317,21 @@ class Router:
         """Router-level queue only; per-replica queues are the replicas'."""
         return len(self.queue)
 
+    @property
+    def busy_seconds(self) -> List[float]:
+        """Per-replica accumulated stepping time (executor-owned)."""
+        return self.executor.busy_seconds
+
     def makespan_seconds(self) -> float:
-        """Modeled data-parallel wall clock: replicas are stepped
-        sequentially in-process, so the slowest replica's accumulated
-        step time is what N truly parallel replicas would take."""
-        return max(self.busy_seconds)
+        """The data-parallel wall clock.  MEASURED (executor wall time)
+        when the live executor truly overlaps replicas (threaded,
+        sharded); otherwise MODELED as the slowest replica's accumulated
+        busy time — under the sequential executor replicas are stepped
+        one after another in-process, so the max busy time is what N
+        truly parallel replicas would take."""
+        if self.executor.measured:
+            return self.executor.wall_seconds
+        return max(self.executor.busy_seconds)
 
     def throughput(self) -> float:
         """Merged end-to-end tok/s (first admission -> last finish across
@@ -284,17 +351,20 @@ class Router:
         """Zero timing/step counters after warmup so measured windows are
         steady-state (the router analogue of warmup_engine's reset)."""
         self.steps = 0
-        self.busy_seconds = [0.0] * len(self.replicas)
+        self.executor.reset_timing()
         self.dispatch_log.clear()
 
     def replica_stats(self) -> List[dict]:
+        """Per-replica snapshot: executor busy time plus the engine's own
+        step/token/queue counters — what bench_router and serve.py
+        report."""
         return [{
             "replica": i,
-            "busy_s": self.busy_seconds[i],
+            "busy_s": self.executor.busy_seconds[i],
             "steps": eng.steps,
             "decode_tokens": eng.decode_tokens,
             "finished": len(eng.done),
             "queue_depth": eng.queue_depth(),
             "free_slots": eng.free_slots(),
             "free_pages": eng.free_pages(),
-        } for i, eng in enumerate(self.replicas)]
+        } for i, eng in enumerate(self.engines)]

@@ -109,6 +109,68 @@ class _Slot:
         return self.req is None
 
 
+@dataclass
+class StepPlan:
+    """Host-built operands for one jitted decode dispatch.
+
+    `ServingEngine.begin_step()` runs the host half of a decode step
+    (admission, emit bookkeeping, page-table growth) and returns a plan;
+    the device half dispatches the jitted decode with the plan's operands
+    and `commit_step()` records the result (retirement, counters).  The
+    split exists so replica executors (serving/parallel_exec.py) can
+    batch the device half across engines — the sharded executor stacks
+    the operands of several plans along a leading replica axis and runs
+    one vmapped decode — while `ServingEngine.step()` stays the
+    single-engine begin -> dispatch -> commit composition.
+    """
+    active: List[int]                 # slot indices decoding this step
+    donor: int                        # active lane free lanes mirror
+    tok: np.ndarray                   # (n_slots,) int32 decode inputs
+    pos: np.ndarray                   # (n_slots,) int32 write positions
+    free_mask: np.ndarray             # (n_slots,) bool
+    temps: np.ndarray                 # (n_slots,) float32
+    top_ps: np.ndarray                # (n_slots,) float32
+    live_pages: int                   # static paged walk bound (0 = dense)
+    sample: bool                      # any lane with temperature > 0
+
+
+def make_decode_fns(cfg):
+    """Build the (greedy, sample) decode-step callables the engine jits.
+
+    Module-level (rather than closures in `ServingEngine.__init__`) so
+    the sharded replica executor can vmap THE SAME step bodies over a
+    leading replica axis — one definition, two compilation strategies,
+    no drift between the per-engine and batched paths.
+    """
+    def _restore_table(data, c):
+        # the host mirror is the source of truth for the page table;
+        # the lane-mirrored view must not escape the step
+        if c.kind != "paged":
+            return data
+        return {**data, "page_table": c.data["page_table"]}
+
+    def _decode_greedy(p, d, tok, c, pos, free_mask, donor, live_pages):
+        view = kv_cache.decode_view(c, free_mask, donor)
+        logits, data = api.decode_step(p, d, cfg, tok, view, pos,
+                                       live_pages=live_pages)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, CacheHandle(_restore_table(data, c), c.kind,
+                                c.page_size)
+
+    def _decode_sample(p, d, tok, c, pos, free_mask, donor, live_pages,
+                       key, step, temps, top_ps):
+        view = kv_cache.decode_view(c, free_mask, donor)
+        logits, data = api.decode_step(p, d, cfg, tok, view, pos,
+                                       live_pages=live_pages)
+        keys = jax.random.split(jax.random.fold_in(key, step),
+                                tok.shape[0])
+        nxt = sample_tokens(logits, keys, temps, top_ps)
+        return nxt, CacheHandle(_restore_table(data, c), c.kind,
+                                c.page_size)
+
+    return _decode_greedy, _decode_sample
+
+
 def sample_tokens(logits: jax.Array, keys: jax.Array, temps: jax.Array,
                   top_ps: jax.Array) -> jax.Array:
     """Per-lane temperature + nucleus sampling, jit-friendly.
@@ -212,37 +274,12 @@ class ServingEngine:
             return sample_tokens(logits[None], jax.random.split(k, 1),
                                  temp[None], top_p[None])[0]
 
-        def _restore_table(data, c):
-            # the host mirror is the source of truth for the page table;
-            # the lane-mirrored view must not escape the step
-            if c.kind != "paged":
-                return data
-            return {**data, "page_table": c.data["page_table"]}
-
-        def _decode_greedy(p, d, tok, c, pos, free_mask, donor, live_pages):
-            view = kv_cache.decode_view(c, free_mask, donor)
-            logits, data = api.decode_step(p, d, cfg, tok, view, pos,
-                                           live_pages=live_pages)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return nxt, CacheHandle(_restore_table(data, c), c.kind,
-                                    c.page_size)
-
-        def _decode_sample(p, d, tok, c, pos, free_mask, donor, live_pages,
-                           key, step, temps, top_ps):
-            view = kv_cache.decode_view(c, free_mask, donor)
-            logits, data = api.decode_step(p, d, cfg, tok, view, pos,
-                                           live_pages=live_pages)
-            keys = jax.random.split(jax.random.fold_in(key, step),
-                                    tok.shape[0])
-            nxt = sample_tokens(logits, keys, temps, top_ps)
-            return nxt, CacheHandle(_restore_table(data, c), c.kind,
-                                    c.page_size)
-
         # the engine cache handle is donated: the caller always rebinds
         # self.cache to the result, and donation lets XLA update one
         # lane / one token column in place instead of copying the whole
         # cache every call.  live_pages is static: the paged decode jit
         # compiles one variant per live-page bucket (see _live_pages).
+        _decode_greedy, _decode_sample = make_decode_fns(cfg)
         self._jit_prefill = jax.jit(_prefill)
         self._jit_first = jax.jit(_first_tok)
         self._jit_decode_greedy = jax.jit(_decode_greedy,
@@ -408,7 +445,14 @@ class ServingEngine:
                     self.params, self.dsg, tok, self.cache, pos, free_mask,
                     0, live, self._base_key, 0, temps, top_ps)
 
-    def step(self):
+    def begin_step(self) -> Optional[StepPlan]:
+        """Host half of a decode step: admit queued prompts, emit each
+        active lane's pending token, grow page tables for this step's
+        write positions, and build the decode operands.  Returns None
+        when no lane is active (and raises if prompts are queued but can
+        never be admitted).  Callers must follow a non-None plan with
+        the jitted decode dispatch and `commit_step()` — `step()` is
+        that composition; replica executors batch the middle."""
         self._admit()
         active = [i for i, s in enumerate(self.slots) if not s.free]
         if not active:
@@ -418,7 +462,7 @@ class ServingEngine:
                     "the paged cache pool is smaller than a single "
                     "request's page reservation; raise cache_tokens or "
                     "lower max_new/prompt_bucket")
-            return
+            return None
         # Free/retired lanes mirror the first active lane instead of feeding
         # an arbitrary pad token: with the paper's inter-sample threshold
         # sharing (DRS threshold_mode="shared", taken from batch row 0) an
@@ -447,26 +491,24 @@ class ServingEngine:
                 self.cache = self.backend.ensure(self.cache, i, s.pos)
         for i in active:
             self.slots[i].req.output.append(int(tok[i]))
-        t0 = time.perf_counter()
-        # PRNG keys depend only on (engine seed, step, lane), so mixing
-        # greedy-only and sampling steps never shifts the key schedule
-        live = self._live_pages(pos)
-        if (temps > 0).any():
-            next_tok, self.cache = self._jit_decode_sample(
-                self.params, self.dsg, jnp.asarray(tok)[:, None],
-                self.cache, jnp.asarray(pos), free_mask, donor, live,
-                self._base_key, self.steps, temps, top_ps)
-        else:
-            next_tok, self.cache = self._jit_decode_greedy(
-                self.params, self.dsg, jnp.asarray(tok)[:, None],
-                self.cache, jnp.asarray(pos), free_mask, donor, live)
-        self._next_tok = np.array(next_tok, np.int32)   # syncs the device
-        self.decode_seconds += time.perf_counter() - t0
-        self.decode_tokens += len(active)
+        return StepPlan(active=active, donor=donor, tok=tok, pos=pos,
+                        free_mask=free_mask, temps=temps, top_ps=top_ps,
+                        live_pages=self._live_pages(pos),
+                        sample=bool((temps > 0).any()))
+
+    def commit_step(self, plan: StepPlan, next_tok: np.ndarray,
+                    seconds: float):
+        """Record a decode result: latch each lane's next input token,
+        account the device time/tokens, and retire finished lanes.
+        `next_tok` must already be host-side (the caller syncs — that is
+        where the device wait belongs in the timing)."""
+        self._next_tok = np.array(next_tok, np.int32)
+        self.decode_seconds += seconds
+        self.decode_tokens += len(plan.active)
         self.steps += 1
         # per-slot retirement — AFTER the EOS token has been emitted, so a
         # stop token always appears in the output it terminates
-        for i in active:
+        for i in plan.active:
             slot = self.slots[i]
             slot.pos += 1
             r = slot.req
@@ -478,6 +520,30 @@ class ServingEngine:
                 slot.req = None
                 slot.pos = 0
                 self.cache = self.backend.free(self.cache, i)
+
+    def step(self):
+        """One full engine step: begin (host) -> jitted decode (device)
+        -> commit (host).  Replica executors that batch the device half
+        across engines call the begin/commit halves directly."""
+        plan = self.begin_step()
+        if plan is None:
+            return
+        t0 = time.perf_counter()
+        # PRNG keys depend only on (engine seed, step, lane), so mixing
+        # greedy-only and sampling steps never shifts the key schedule
+        if plan.sample:
+            next_tok, self.cache = self._jit_decode_sample(
+                self.params, self.dsg, jnp.asarray(plan.tok)[:, None],
+                self.cache, jnp.asarray(plan.pos), plan.free_mask,
+                plan.donor, plan.live_pages, self._base_key, self.steps,
+                plan.temps, plan.top_ps)
+        else:
+            next_tok, self.cache = self._jit_decode_greedy(
+                self.params, self.dsg, jnp.asarray(plan.tok)[:, None],
+                self.cache, jnp.asarray(plan.pos), plan.free_mask,
+                plan.donor, plan.live_pages)
+        next_host = np.array(next_tok, np.int32)       # syncs the device
+        self.commit_step(plan, next_host, time.perf_counter() - t0)
 
     # -- stats ---------------------------------------------------------------
 

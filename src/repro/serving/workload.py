@@ -93,9 +93,13 @@ def warmup_router(router: Router, vocab: int, warm_temp: float = 0.0,
     """Warm EVERY replica's prefill buckets and decode live-page variants
     (each replica owns its own jitted callables — nothing is shared), then
     zero the router's timing counters so measured makespans are
-    steady-state."""
-    for eng in router.replicas:
+    steady-state.  Engines are warmed directly (not through the
+    executor), which is safe while no run is in flight; the executor's
+    own jitted callables (the sharded group step) are warmed through
+    `executor.warm()`."""
+    for eng in router.engines:
         warmup_engine(eng, vocab, warm_temp, max_steps=max_steps)
+    router.executor.warm(sample=warm_temp > 0)
     router.reset_counters()
 
 
@@ -105,33 +109,49 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
                  cache_backend: str = "dense", page_size: int = 16,
                  cache_tokens=None, seed: int = 0, replicas: int = 1,
                  route_policy: str = "least_queue",
+                 exec_mode: str = "sequential",
                  max_steps: int = 100_000) -> Dict[str, float]:
     """Run the request list through one engine (replicas=1, the historical
     path) or a Router over `replicas` engines; returns throughput/latency
     stats.  Warmup triggers every jit compile on every replica first so
-    the measurement is steady-state.  Router runs add makespan_s (modeled
-    data-parallel wall clock: slowest replica's busy time) and
-    parallel_tok_per_s (tokens / makespan) to the stats."""
+    the measurement is steady-state.
+
+    `exec_mode` picks the replica executor (serving/parallel_exec.py):
+    "sequential" steps replicas in-process, "threaded" free-runs one
+    worker thread per replica, "sharded" fuses the group into one
+    vmapped device step.  Router runs add `makespan_s` — MODELED
+    data-parallel wall clock (slowest replica's busy time) under the
+    sequential executor, MEASURED wall clock under the parallel ones
+    (`makespan_measured` records which) — and `parallel_tok_per_s`
+    (tokens / makespan) to the stats."""
     engine_kw = dict(n_slots=n_slots, max_seq=max_seq,
                      prompt_bucket=prompt_bucket, admission=admission,
                      cache_backend=cache_backend, page_size=page_size,
                      cache_tokens=cache_tokens)
     warm_temp = max((r.temperature for r in requests), default=0.0)
-    if replicas == 1:
+    if replicas == 1 and exec_mode == "sequential":
         eng = ServingEngine(cfg, params, dsg, seed=seed, **engine_kw)
         warmup_engine(eng, cfg.vocab, warm_temp, max_steps=max_steps)
         runner, stepper = eng, eng
     else:
         runner = Router(cfg, params, dsg, n_replicas=replicas,
-                        policy=route_policy, seed=seed, **engine_kw)
+                        policy=route_policy, exec_mode=exec_mode,
+                        seed=seed, **engine_kw)
         warmup_router(runner, cfg.vocab, warm_temp, max_steps=max_steps)
         stepper = None
 
     for r in requests:
         runner.submit(r)
-    t0 = time.time()
-    done = runner.run(max_steps=max_steps)
-    wall = time.time() - t0
+    try:
+        t0 = time.time()
+        done = runner.run(max_steps=max_steps)
+        wall = time.time() - t0
+    finally:
+        if stepper is None:
+            # release executor worker threads even when the run raises
+            # (e.g. a stalled router) — engines would otherwise stay
+            # pinned by parked daemon threads
+            runner.close()
     toks = sum(len(r.output) for r in done.values())
     lat = np.array(sorted(r.finished - r.submitted for r in done.values()))
     stats = {
@@ -146,7 +166,7 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
         "p50_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
         "p95_s": float(np.percentile(lat, 95)) if len(lat) else 0.0,
     }
-    if replicas == 1:
+    if stepper is not None:
         stats.update({
             "cache_bytes": int(stepper.backend.resident_bytes(stepper.cache)),
             # decode_tok_per_s() raises before any token decodes; an empty
@@ -159,17 +179,19 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
     else:
         stats.update({
             "route_policy": runner.policy.name,
+            "exec_mode": runner.executor.name,
             "cache_bytes": sum(int(e.backend.resident_bytes(e.cache))
-                               for e in runner.replicas),
+                               for e in runner.engines),
             "decode_tok_per_s": sum(e.decode_tokens
-                                    for e in runner.replicas)
+                                    for e in runner.engines)
                                 / max(sum(e.decode_seconds
-                                          for e in runner.replicas), 1e-9),
+                                          for e in runner.engines), 1e-9),
             # total engine decode steps (what serve.py prints); one router
             # tick steps up to `replicas` engines, reported separately
-            "steps": sum(e.steps for e in runner.replicas),
+            "steps": sum(e.steps for e in runner.engines),
             "router_steps": runner.steps,
             "makespan_s": runner.makespan_seconds(),
+            "makespan_measured": runner.executor.measured,
             "parallel_tok_per_s": toks / max(runner.makespan_seconds(),
                                              1e-9),
             "per_replica": runner.replica_stats(),

@@ -17,8 +17,9 @@ test_kv_cache.py:
     assert_streams_equal(a, b)
 
 `run_and_collect` takes an "engine spec" dict (cfg/params/dsg plus any
-`ServingEngine` kwargs; add `n_replicas`/`policy` to run through the
-front-end `Router` instead) and returns `{rid: tokens}`.  Traffic
+`ServingEngine` kwargs; add `n_replicas`/`policy` — and optionally
+`exec_mode`/`mesh`, forwarded to the replica executor — to run through
+the front-end `Router` instead) and returns `{rid: tokens}`.  Traffic
 helpers draw from a fixed-seed generator, so two calls with the same
 seed produce identical prompts in fresh Request objects — never reuse a
 Request across runs; its `output` list is engine state.

@@ -1,0 +1,216 @@
+"""Replica executors (serving/parallel_exec.py).
+
+The load-bearing invariant extends PR 4's: merged greedy token streams
+keyed by request uid must be IDENTICAL across replica COUNTS (pinned by
+test_router.py) and across EXECUTORS — how the replica group runs
+(stepped in sequence, free-running worker threads, one vmapped device
+step) decides only WHEN and WHERE a request decodes, never WHAT.  The
+matrix here pins {sequential, threaded} x {dense, paged} x {1, 2, 3}
+replicas bitwise against the bare-engine stream, plus the sharded
+executor (with and without a `replicas` mesh axis).  On top of that:
+`makespan_seconds()` must switch between the sequential executor's
+MODELED number (max per-replica busy time) and the parallel executors'
+MEASURED wall clock, worker exceptions must surface in the caller's
+thread, and the threaded drive loop must detect the undispatchable-head
+stall instead of hanging."""
+import jax
+import numpy as np
+import pytest
+
+from harness import (assert_streams_equal, engine_spec, make_engine_parts,
+                     mixed_traffic, run_and_collect)
+from repro.parallel.sharding import replica_mesh
+from repro.serving.parallel_exec import (EXEC_MODES, ReplicaProxy,
+                                         SequentialExecutor, get_executor)
+from repro.serving.router import Router
+from repro.serving.scheduler import Request
+
+
+@pytest.fixture(scope="module")
+def engine_parts():
+    return make_engine_parts()
+
+
+_BACKEND_KW = {
+    "dense": {},
+    # worst-case lane reservation: min(bucket 32 + max_new 8, 64) = 40
+    # tokens = 5 pages of 8; 80-token pools hold two lanes per replica
+    "paged": {"cache_backend": "paged", "page_size": 8, "cache_tokens": 80},
+}
+
+# module-level memo: the bare-engine reference stream per backend,
+# computed once and shared across the executor parametrizations
+_baseline = {}
+
+
+def _reference(engine_parts, backend):
+    if backend not in _baseline:
+        spec = engine_spec(*engine_parts, **_BACKEND_KW[backend])
+        _baseline[backend] = run_and_collect(spec,
+                                             mixed_traffic(spec["cfg"]))
+    return _baseline[backend]
+
+
+# ---------------------------------------------------------------------------
+# guards / proxy plumbing (no engine runs — cheap)
+# ---------------------------------------------------------------------------
+
+def test_exec_mode_guards(engine_parts):
+    cfg, params, dsg = engine_parts
+    with pytest.raises(ValueError):
+        Router(cfg, params, dsg, exec_mode="processes")
+    with pytest.raises(ValueError):
+        get_executor("processes", [])
+    with pytest.raises(ValueError):          # mesh without a replicas axis
+        get_executor("sharded", [], mesh=jax.sharding.Mesh(
+            np.array(jax.devices()[:1]), axis_names=("data",)))
+    router = Router(cfg, params, dsg, n_replicas=2, n_slots=2,
+                    max_seq=64, exec_mode="threaded")
+    with pytest.raises(RuntimeError):        # free-running: no lockstep tick
+        router.step()
+    router.close()
+
+
+def test_replica_proxy_forwards(engine_parts):
+    """Policies and stats code talk to executor-owned proxies; attribute
+    reads AND writes must land on the underlying engine (bench_router's
+    steady-state reset assigns counters through router.replicas)."""
+    cfg, params, dsg = engine_parts
+    router = Router(cfg, params, dsg, n_replicas=2, n_slots=3, max_seq=64)
+    proxy = router.replicas[0]
+    assert isinstance(proxy, ReplicaProxy)
+    assert proxy.engine is router.engines[0]
+    assert proxy.n_slots == 3 and proxy.free_slots() == 3
+    proxy.steps = 7                          # write-through, not shadowing
+    assert router.engines[0].steps == 7
+    req = Request(uid=0, prompt=np.zeros(4, np.int32), max_new=2)
+    proxy.submit(req)                        # routes through the executor
+    assert router.engines[0].queue_depth() == 1
+
+
+# ---------------------------------------------------------------------------
+# executor invariance (the acceptance matrix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+@pytest.mark.parametrize("exec_mode", ["sequential", "threaded"])
+def test_executor_invariance(engine_parts, backend, exec_mode):
+    """Merged greedy token streams are bitwise identical to the
+    bare-engine reference for 1, 2, and 3 replicas under every executor
+    x backend combination: requests are dispatched whole and each
+    replica is solo-deterministic, so execution strategy is invisible in
+    the results."""
+    ref = _reference(engine_parts, backend)
+    for n in (1, 2, 3):
+        spec = engine_spec(*engine_parts, n_replicas=n,
+                           exec_mode=exec_mode, **_BACKEND_KW[backend])
+        out, router = run_and_collect(spec, mixed_traffic(spec["cfg"]),
+                                      max_steps=100_000,
+                                      return_engine=True)
+        assert_streams_equal(ref, out,
+                             f"{backend}/{exec_mode}/{n} replicas")
+        uids = [u for u, _ in router.dispatch_log]
+        assert sorted(uids) == sorted(ref)
+        router.close()
+
+
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+def test_sharded_executor_streams(engine_parts, backend):
+    """The vmapped group step must reproduce the bare-engine streams:
+    stacking operands/caches along the replica axis and fusing N decode
+    dispatches into one cannot change per-replica content."""
+    ref = _reference(engine_parts, backend)
+    spec = engine_spec(*engine_parts, n_replicas=2, exec_mode="sharded",
+                       **_BACKEND_KW[backend])
+    out = run_and_collect(spec, mixed_traffic(spec["cfg"]),
+                          max_steps=100_000)
+    assert_streams_equal(ref, out, f"sharded/{backend}/2 replicas")
+
+
+@pytest.mark.skipif(jax.local_device_count() < 2,
+                    reason="needs >= 2 devices for a replicas mesh")
+def test_sharded_executor_on_replica_mesh(engine_parts):
+    """With a `replicas` mesh axis the stacked group is laid out one
+    replica per device (parallel.sharding.replica_mesh) — streams must
+    still match the single-device reference bitwise."""
+    ref = _reference(engine_parts, "dense")
+    spec = engine_spec(*engine_parts, n_replicas=2, exec_mode="sharded")
+    spec["mesh"] = replica_mesh(2)
+    out = run_and_collect(spec, mixed_traffic(spec["cfg"]),
+                          max_steps=100_000)
+    assert_streams_equal(ref, out, "sharded/replicas-mesh/2")
+
+
+# ---------------------------------------------------------------------------
+# measured vs modeled makespan
+# ---------------------------------------------------------------------------
+
+def test_makespan_selection(engine_parts):
+    """The sequential executor records per-replica busy time and
+    `makespan_seconds()` MODELS the parallel wall clock from it (max);
+    the threaded executor truly overlaps replicas, so the same method
+    reports the MEASURED drive wall clock instead."""
+    cfg = engine_parts[0]
+    spec = engine_spec(*engine_parts, n_replicas=2)
+    seq_out, seq = run_and_collect(spec, mixed_traffic(cfg),
+                                   return_engine=True)
+    assert isinstance(seq.executor, SequentialExecutor)
+    assert not seq.executor.measured
+    assert seq.makespan_seconds() == max(seq.busy_seconds)
+    assert seq.makespan_seconds() > 0
+    # the wall clock of serialized stepping covers BOTH replicas' work,
+    # so the modeled (parallel) makespan must undercut it
+    assert seq.makespan_seconds() <= seq.executor.wall_seconds
+
+    spec = engine_spec(*engine_parts, n_replicas=2, exec_mode="threaded")
+    thr_out, thr = run_and_collect(spec, mixed_traffic(cfg),
+                                   return_engine=True)
+    assert thr.executor.measured
+    assert thr.makespan_seconds() == thr.executor.wall_seconds
+    assert thr.makespan_seconds() > 0
+    assert_streams_equal(seq_out, thr_out, "makespan test streams")
+    thr.close()
+
+    # reset_counters() zeroes the executor's timing for steady-state
+    # measurement windows
+    seq.reset_counters()
+    assert seq.executor.wall_seconds == 0
+    assert seq.busy_seconds == [0.0, 0.0]
+
+
+# ---------------------------------------------------------------------------
+# failure propagation from worker threads
+# ---------------------------------------------------------------------------
+
+def test_threaded_engine_stall_surfaces(engine_parts):
+    """An engine whose paged pool cannot hold one request's reservation
+    raises from its worker thread; the drive loop must re-raise in the
+    caller's thread instead of hanging (round_robin dispatches
+    unconditionally, so the stall happens inside the engine)."""
+    cfg, params, dsg = engine_parts
+    router = Router(cfg, params, dsg, n_replicas=2, policy="round_robin",
+                    exec_mode="threaded", n_slots=2, max_seq=64,
+                    prompt_bucket=32, cache_backend="paged", page_size=8,
+                    cache_tokens=16)
+    router.submit(Request(uid=0, prompt=np.zeros(30, np.int32),
+                          max_new=16))
+    with pytest.raises(RuntimeError, match="stalled"):
+        router.run(max_steps=2_000)
+    router.close()
+
+
+def test_threaded_router_stall_detected(engine_parts):
+    """When the policy itself never places the queue head (least_pages
+    against an impossible reservation) every worker parks and the drive
+    loop must raise the router-stall error, mirroring the sequential
+    executor's behavior."""
+    cfg, params, dsg = engine_parts
+    router = Router(cfg, params, dsg, n_replicas=2, policy="least_pages",
+                    exec_mode="threaded", n_slots=2, max_seq=64,
+                    prompt_bucket=32, cache_backend="paged", page_size=8,
+                    cache_tokens=16)
+    router.submit(Request(uid=0, prompt=np.zeros(30, np.int32),
+                          max_new=16))
+    with pytest.raises(RuntimeError, match="router stalled"):
+        router.run(max_steps=2_000)
+    router.close()
