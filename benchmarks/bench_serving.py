@@ -14,7 +14,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
 from repro import configs
 from repro.models import api

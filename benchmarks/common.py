@@ -4,8 +4,6 @@ so a deterministic Gaussian-cluster task stands in) and a small LM, each
 with pluggable DSG selection strategy (drs | oracle | random | none)."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ roofline report from the dry-run artifacts.
 """
 import argparse
 import os
-import sys
 import time
 
 

@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""repro-lint CLI: repo-specific static analysis with a baseline gate.
+
+    PYTHONPATH=src python scripts/run_lint.py                 # lint src/
+    PYTHONPATH=src python scripts/run_lint.py --fail-on-new   # CI gate
+    PYTHONPATH=src python scripts/run_lint.py --write-baseline
+    PYTHONPATH=src python scripts/run_lint.py --report lint_report.json
+
+Checks (src/repro/analysis/, docs/analysis.md):
+
+  jit_hygiene       JIT101-106  host syncs / tracer branching / closure
+                                capture / non-hashable statics in traced code
+  locks             LCK201-202  @locked_by/@owned_by field discipline
+  pallas_contracts  PAL301-303  interpret-mode reads, grid/index_map purity
+  pytrees           PYT401     dataclasses crossing jit must be pytrees
+
+Baseline: scripts/lint_baseline.json holds ACCEPTED findings (each with
+a mandatory reason).  `--fail-on-new` exits 1 on any finding not in the
+baseline, on baseline entries with an empty reason, and on stale entries
+(accepted findings that no longer fire — remove them).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis.findings import load_baseline, write_baseline  # noqa: E402
+from repro.analysis.runner import run_lint  # noqa: E402
+
+DEFAULT_BASELINE = REPO / "scripts" / "lint_baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: src/)")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="accepted-findings file (default: "
+                         "scripts/lint_baseline.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept every current finding into the baseline "
+                         "(then fill in each entry's 'reason')")
+    ap.add_argument("--fail-on-new", action="store_true",
+                    help="exit 1 on findings outside the baseline, "
+                         "unreasoned baseline entries, or stale entries")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write a JSON report (findings + baseline "
+                         "partition) for CI artifacts")
+    ap.add_argument("--root", default=str(REPO / "src"),
+                    help="tree to analyze (default: src/; tests point "
+                         "this at fixture corpora)")
+    args = ap.parse_args(argv)
+
+    # always index the whole root (findings depend on cross-module call
+    # resolution); path arguments only filter what gets REPORTED
+    root = Path(args.root).resolve()
+    findings = run_lint(root)
+    if args.paths:
+        keep = set()
+        for p in args.paths:
+            path = Path(p).resolve()
+            cands = ([f for f in path.rglob("*.py")] if path.is_dir()
+                     else [path])
+            for f in cands:
+                try:
+                    keep.add(str(f.relative_to(root)))
+                except ValueError:
+                    pass
+        findings = [f for f in findings if f.file in keep]
+        if not keep:
+            print(f"run_lint: no analyzable files under src/ in "
+                  f"{args.paths}", file=sys.stderr)
+            return 2
+    baseline = load_baseline(args.baseline)
+
+    if args.write_baseline:
+        write_baseline(args.baseline, findings, previous=baseline)
+        print(f"wrote {len(findings)} accepted finding(s) to "
+              f"{args.baseline}; fill in every empty 'reason'")
+        return 0
+
+    new, accepted = baseline.split(findings)
+    stale = baseline.stale(findings)
+    unreasoned = baseline.unreasoned()
+
+    for f in new:
+        print(f.render())
+    if accepted:
+        print(f"({len(accepted)} baselined finding(s) suppressed)")
+    for fp in stale:
+        print(f"stale baseline entry (violation fixed — remove it): {fp}")
+    for fp in unreasoned:
+        print(f"baseline entry without a reason: {fp}")
+
+    if args.report:
+        payload = {
+            "root": str(root),
+            "new": [f.as_dict() for f in new],
+            "accepted": [f.as_dict() for f in accepted],
+            "stale_baseline": stale,
+            "unreasoned_baseline": unreasoned,
+        }
+        Path(args.report).write_text(json.dumps(payload, indent=2) + "\n",
+                                     encoding="utf-8")
+
+    if new:
+        print(f"repro-lint: {len(new)} new finding(s)")
+        return 1
+    if args.fail_on_new and (stale or unreasoned):
+        print("repro-lint: baseline needs attention "
+              f"({len(stale)} stale, {len(unreasoned)} unreasoned)")
+        return 1
+    print(f"repro-lint: clean ({len(accepted)} baselined)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

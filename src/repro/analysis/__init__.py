@@ -1,0 +1,32 @@
+"""repro-lint: repo-specific static analysis + runtime sanitizer.
+
+The serving stack's correctness rests on invariants that used to hold
+only by reviewer convention: host syncs must stay out of the jitted
+decode path, the `ThreadedExecutor`/`Router`/`ServingEngine` trio share
+mutable state under an informal `_cond` lock discipline, Pallas
+BlockSpecs/grids must stay shape-static, and dataclasses crossing a jit
+boundary must be registered pytrees.  This package checks all four
+mechanically:
+
+  * `contracts`        — the annotation vocabulary (`locked_by`,
+                         `owned_by`, `runs_on`, `exempt`) plus the
+                         `REPRO_TSAN=1` runtime shim (`CheckedCondition`
+                         and guarded containers) that turns tier-1 runs
+                         into a dynamic lock-discipline check.
+  * `callgraph`        — AST module index + jit-boundary reachability
+                         shared by the checkers.
+  * `jit_hygiene`      — host syncs / tracer branching / mutable-closure
+                         capture / non-hashable statics inside traced
+                         code.
+  * `locks`            — every mutation of an annotated field is under
+                         the declared lock or on the declared owner.
+  * `pallas_contracts` — shape-static grids/index_maps; interpret mode
+                         is read only via `kernels.ops._interpret()`.
+  * `pytrees`          — dataclasses crossing a jit boundary are
+                         registered pytrees.
+
+`scripts/run_lint.py` is the CLI (baseline workflow, CI gate); see
+docs/analysis.md for the full contract.
+"""
+from repro.analysis.findings import Finding, load_baseline  # noqa: F401
+from repro.analysis.runner import run_lint  # noqa: F401

@@ -1,0 +1,102 @@
+"""Finding record + baseline workflow for repro-lint.
+
+A `Finding` pins a violation to a file/line plus a stable *fingerprint*
+(file, code, enclosing definition, message) that survives unrelated
+edits moving the line around.  The baseline file
+(`scripts/lint_baseline.json`) holds fingerprints of ACCEPTED findings —
+each with a human-written reason — so `run_lint.py --fail-on-new` gates
+on regressions without forcing every historical acceptance to block CI.
+
+Workflow (docs/analysis.md):
+
+  * fix the finding (preferred), or
+  * accept it: `scripts/run_lint.py --write-baseline`, then edit the
+    generated entry's `"reason"` field — empty reasons are themselves a
+    lint error, so acceptances stay reviewed.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Sequence
+
+
+@dataclass(frozen=True)
+class Finding:
+    file: str          # path relative to the analysis root
+    line: int
+    col: int
+    code: str          # e.g. "JIT101"
+    checker: str       # e.g. "jit_hygiene"
+    message: str
+    context: str = ""  # enclosing qualname ("module.Class.method")
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.file}::{self.code}::{self.context}::{self.message}"
+
+    def render(self) -> str:
+        where = f"{self.file}:{self.line}:{self.col}"
+        ctx = f" [{self.context}]" if self.context else ""
+        return f"{where}: {self.code} {self.message}{ctx}"
+
+    def as_dict(self) -> dict:
+        return {"file": self.file, "line": self.line, "col": self.col,
+                "code": self.code, "checker": self.checker,
+                "message": self.message, "context": self.context}
+
+
+@dataclass
+class Baseline:
+    """Accepted findings, keyed by fingerprint."""
+
+    entries: Dict[str, dict] = field(default_factory=dict)
+
+    def accepts(self, finding: Finding) -> bool:
+        return finding.fingerprint in self.entries
+
+    def split(self, findings: Sequence[Finding]):
+        """(new, accepted) partition of `findings`."""
+        new = [f for f in findings if not self.accepts(f)]
+        accepted = [f for f in findings if self.accepts(f)]
+        return new, accepted
+
+    def stale(self, findings: Sequence[Finding]) -> List[str]:
+        """Baselined fingerprints no longer produced — candidates for
+        removal (the accepted violation was fixed)."""
+        live = {f.fingerprint for f in findings}
+        return [fp for fp in self.entries if fp not in live]
+
+    def unreasoned(self) -> List[str]:
+        return [fp for fp, e in self.entries.items()
+                if not str(e.get("reason", "")).strip()]
+
+
+def load_baseline(path) -> Baseline:
+    path = Path(path)
+    if not path.exists():
+        return Baseline()
+    raw = json.loads(path.read_text(encoding="utf-8"))
+    entries = {e["fingerprint"]: e for e in raw.get("accepted", [])}
+    return Baseline(entries)
+
+
+def write_baseline(path, findings: Sequence[Finding],
+                   previous: Baseline = None) -> None:
+    """Write every current finding as an accepted entry, carrying over
+    reasons from `previous` where the fingerprint survived."""
+    prev = previous.entries if previous else {}
+    accepted = []
+    for f in sorted(findings, key=lambda f: f.fingerprint):
+        entry = {"fingerprint": f.fingerprint,
+                 "file": f.file, "code": f.code, "context": f.context,
+                 "message": f.message,
+                 "reason": prev.get(f.fingerprint, {}).get("reason", "")}
+        accepted.append(entry)
+    payload = {"_comment": ("repro-lint accepted findings; every entry "
+                            "needs a non-empty 'reason' "
+                            "(see docs/analysis.md)"),
+               "accepted": accepted}
+    Path(path).write_text(json.dumps(payload, indent=2) + "\n",
+                          encoding="utf-8")

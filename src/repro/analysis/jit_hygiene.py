@@ -1,0 +1,320 @@
+"""Checker 1: host-sync and trace hygiene inside jit boundaries.
+
+Walks every function reachable from a `jax.jit` / `pl.pallas_call`
+boundary (via `callgraph.Index`) and flags operations that force a
+device sync, concretize a tracer, or silently bake mutable state into a
+compiled computation:
+
+  JIT101  `.item()` on a value inside traced code (host sync)
+  JIT102  `float()` / `int()` / `bool()` coercion of a traced value
+  JIT103  `np.*` call on a traced value (host round-trip; use `jnp.*`)
+  JIT104  Python control flow (`if`/`while`/`for`/`assert`) on a traced
+          value — jit-root functions only, where the static argument set
+          is known from the jit call site
+  JIT105  jitted closure reads `self.<attr>` — a mutable engine
+          attribute captured at trace time is a silent snapshot
+  JIT106  non-hashable static argument (mutable default, or a literal
+          list/dict/set passed at a static position)
+
+Taint model (documented in docs/analysis.md): non-static parameters are
+traced; taint propagates through arithmetic, comparisons, subscripts,
+and whitelisted array methods (`astype`, `sum`, `at[...]`, ...), and is
+killed by attribute access (`x.shape`, `cfg.vocab`, `handle.kind` are
+static) and by shape-reading calls (`len`, `isinstance`).  For functions
+reachable from — but not directly at — a jit boundary the static set is
+unknown, so two reductions apply: only parameters the body itself uses
+as arrays (fed to `jnp`/`lax` ops or array methods) seed the taint, and
+the branching check (JIT104) is skipped — config-driven Python branches
+are the norm below the boundary.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.callgraph import Index, JitRoot, dotted
+from repro.analysis.findings import Finding
+
+CHECKER = "jit_hygiene"
+
+# array methods that return a traced value from a traced receiver
+_TRACER_METHODS = {
+    "astype", "reshape", "transpose", "ravel", "flatten", "squeeze",
+    "sum", "max", "min", "mean", "prod", "cumsum", "cumprod", "dot",
+    "clip", "round", "sort", "argsort", "argmax", "argmin", "at", "set",
+    "add", "multiply", "get", "take", "repeat", "swapaxes", "conj",
+    "real", "imag", "T",
+}
+# calls whose result is static regardless of argument taint
+_KILLER_CALLS = {"len", "isinstance", "hasattr", "getattr", "type",
+                 "range", "enumerate", "zip"}
+_COERCIONS = {"float", "int", "bool", "complex"}
+
+
+class _Taint:
+    """Syntactic taint evaluation over one function body."""
+
+    def __init__(self, tainted: Set[str]):
+        self.names = set(tainted)
+
+    def expr(self, node) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.names
+        if isinstance(node, (ast.BinOp,)):
+            return self.expr(node.left) or self.expr(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.expr(node.operand)
+        if isinstance(node, ast.Compare):
+            return self.expr(node.left) or any(self.expr(c)
+                                               for c in node.comparators)
+        if isinstance(node, ast.BoolOp):
+            return any(self.expr(v) for v in node.values)
+        if isinstance(node, ast.Subscript):
+            return self.expr(node.value)
+        if isinstance(node, ast.IfExp):
+            return (self.expr(node.test) or self.expr(node.body)
+                    or self.expr(node.orelse))
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.expr(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.expr(node.value)
+        if isinstance(node, ast.Attribute):
+            # x.shape / cfg.vocab / handle.kind are static reads — taint
+            # survives only through whitelisted array methods, handled
+            # at the Call below
+            return False
+        if isinstance(node, ast.Call):
+            name = dotted(node.func) or ""
+            base = name.split(".")[0]
+            if base in _KILLER_CALLS:
+                return False
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _TRACER_METHODS:
+                if self.expr(node.func.value) \
+                        or self._receiver_chain_tainted(node.func.value):
+                    return True
+            if base in ("jnp", "jax", "lax"):
+                return any(self.expr(a) for a in node.args) \
+                    or any(self.expr(k.value) for k in node.keywords)
+            return any(self.expr(a) for a in node.args)
+        return False
+
+    def _receiver_chain_tainted(self, node) -> bool:
+        """x.at[i].set(v): the receiver is Subscript(Attribute(x,'at'));
+        walk attribute/subscript chains back to the base name."""
+        while isinstance(node, (ast.Attribute, ast.Subscript)):
+            node = node.value
+        return isinstance(node, ast.Name) and node.id in self.names
+
+    def assign(self, node):
+        if isinstance(node, ast.Assign):
+            tainted = self.expr(node.value)
+            for tgt in node.targets:
+                self._bind(tgt, tainted)
+        elif isinstance(node, ast.AugAssign):
+            if isinstance(node.target, ast.Name):
+                if self.expr(node.value):
+                    self.names.add(node.target.id)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            self._bind(node.target, self.expr(node.value))
+
+    def _bind(self, tgt, tainted: bool):
+        if isinstance(tgt, ast.Name):
+            if tainted:
+                self.names.add(tgt.id)
+            else:
+                self.names.discard(tgt.id)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for e in tgt.elts:
+                self._bind(e, tainted)
+
+
+def _param_names(fn) -> List[str]:
+    args = fn.args
+    return [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+
+
+def _array_used_names(fn) -> Set[str]:
+    """Names the function body treats as arrays: passed bare as the
+    FIRST (data) argument of a jnp/jax/lax call, or receiving a
+    whitelisted array method.  Trailing positional args are often static
+    by contract (lax.top_k's k, axis numbers, shapes) — seeding them
+    would flag legal host math on static scalars."""
+    used: Set[str] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func) or ""
+        if name.split(".")[0] in ("jnp", "jax", "lax") and node.args:
+            base = node.args[0]
+            while isinstance(base, (ast.Subscript,)):
+                base = base.value
+            if isinstance(base, ast.Name):
+                used.add(base.id)
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _TRACER_METHODS:
+            base = node.func.value
+            while isinstance(base, (ast.Attribute, ast.Subscript)):
+                base = base.value
+            if isinstance(base, ast.Name):
+                used.add(base.id)
+    return used
+
+
+def _finding(fi, node, code, msg) -> Finding:
+    return Finding(file=fi.module.relpath, line=node.lineno,
+                   col=getattr(node, "col_offset", 0), code=code,
+                   checker=CHECKER, message=msg, context=fi.qualname)
+
+
+def check(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    roots = index.jit_roots()
+    root_by_qual = {r.func.qualname: r for r in roots}
+    traced = index.traced_functions(roots)
+    for qual, fi in sorted(traced.items()):
+        root = root_by_qual.get(qual)
+        findings.extend(_check_function(fi, root))
+    for root in roots:
+        findings.extend(_check_static_args(root))
+    return findings
+
+
+def _check_function(fi, root: Optional[JitRoot]) -> List[Finding]:
+    fn = fi.node
+    if isinstance(fn, ast.Lambda):
+        return []
+    params = _param_names(fn)
+    statics = root.static_params() if root is not None else set()
+    tainted = {p for p in params if p not in statics and p != "self"}
+    if root is None:
+        # below the boundary the static set is unknown: seed taint only
+        # from params the body itself treats as arrays
+        tainted &= _array_used_names(fn)
+    taint = _Taint(tainted)
+    out: List[Finding] = []
+    is_root = root is not None
+
+    closure_self_ok = "self" in params
+
+    def walk(body):
+        for stmt in body:
+            _visit_stmt(stmt)
+
+    def _visit_stmt(stmt):
+        # nested defs are traced via their own reachability entry
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            _scan_expr(stmt)
+            taint.assign(stmt)
+            return
+        if is_root and isinstance(stmt, (ast.If, ast.While)) \
+                and taint.expr(stmt.test):
+            out.append(_finding(
+                fi, stmt, "JIT104",
+                "Python branch on a traced value concretizes the tracer; "
+                "use lax.cond/jnp.where or make the operand static"))
+        elif is_root and isinstance(stmt, ast.Assert) \
+                and taint.expr(stmt.test):
+            out.append(_finding(
+                fi, stmt, "JIT104",
+                "assert on a traced value concretizes the tracer"))
+        elif is_root and isinstance(stmt, ast.For) \
+                and taint.expr(stmt.iter):
+            out.append(_finding(
+                fi, stmt, "JIT104",
+                "Python loop over a traced value concretizes the tracer; "
+                "use lax.scan/fori_loop"))
+        if _is_compound(stmt):
+            # scan only the header expressions here; nested statements
+            # are visited (and scanned) by the recursion below
+            for header in ("test", "iter", "target"):
+                expr = getattr(stmt, header, None)
+                if expr is not None and not isinstance(expr, list):
+                    _scan_expr(expr)
+            for item in getattr(stmt, "items", []):
+                _scan_expr(item.context_expr)
+            for attr in ("body", "orelse", "finalbody"):
+                walk(getattr(stmt, attr, []))
+            for h in getattr(stmt, "handlers", []):
+                walk(h.body)
+        else:
+            _scan_expr(stmt)
+
+    def _is_compound(stmt):
+        return isinstance(stmt, (ast.If, ast.While, ast.For, ast.With,
+                                 ast.Try))
+
+    def _scan_expr(stmt):
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not isinstance(node, ast.Call):
+                if not closure_self_ok and isinstance(node, ast.Attribute) \
+                        and isinstance(node.value, ast.Name) \
+                        and node.value.id == "self":
+                    out.append(_finding(
+                        fi, node, "JIT105",
+                        f"jitted closure reads self.{node.attr}: mutable "
+                        f"engine state captured at trace time is a silent "
+                        f"snapshot; pass it as an argument"))
+                continue
+            name = dotted(node.func) or ""
+            # JIT101: .item()
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item":
+                out.append(_finding(
+                    fi, node, "JIT101",
+                    ".item() inside traced code forces a host sync"))
+                continue
+            # JIT102: float()/int()/bool() of a traced value
+            if name in _COERCIONS and node.args \
+                    and taint.expr(node.args[0]):
+                out.append(_finding(
+                    fi, node, "JIT102",
+                    f"{name}() coercion of a traced value forces a host "
+                    f"sync; use jnp casts or keep the value on device"))
+                continue
+            # JIT103: np.* on a traced value
+            if name.split(".")[0] == "np" and any(
+                    taint.expr(a) for a in node.args):
+                out.append(_finding(
+                    fi, node, "JIT103",
+                    f"{name}(...) on a traced value round-trips through "
+                    f"the host; use the jnp equivalent"))
+
+    walk(fn.body)
+    return out
+
+
+def _check_static_args(root: JitRoot) -> List[Finding]:
+    """JIT106: static args must be hashable — flag mutable defaults on
+    static params."""
+    fn = root.func.node
+    if isinstance(fn, ast.Lambda):
+        return []
+    out: List[Finding] = []
+    statics = root.static_params()
+    args = fn.args
+    pos = args.posonlyargs + args.args
+    defaults = args.defaults
+    pairs = list(zip(pos[len(pos) - len(defaults):], defaults))
+    pairs += [(a, d) for a, d in zip(args.kwonlyargs, args.kw_defaults)
+              if d is not None]
+    for arg, default in pairs:
+        if arg.arg not in statics:
+            continue
+        bad = isinstance(default, (ast.List, ast.Dict, ast.Set)) or (
+            isinstance(default, ast.Call)
+            and (dotted(default.func) or "") in
+            ("list", "dict", "set", "np.array", "np.asarray",
+             "np.zeros", "np.ones", "jnp.array", "jnp.zeros",
+             "jnp.ones"))
+        if bad:
+            out.append(_finding(
+                root.func, default, "JIT106",
+                f"static argument {arg.arg!r} has a non-hashable default; "
+                f"static args are dict keys in jax's compilation cache"))
+    return out

@@ -1,0 +1,226 @@
+"""Checker 2: lock discipline / thread-ownership of annotated fields.
+
+Reads the `analysis.contracts` decorators off class definitions:
+
+    @locked_by("_cond", "_idle", "_errors")
+    @owned_by("router", "_threads")
+    class ThreadedExecutor: ...
+
+and verifies, for every method in the class body, that every mutation of
+a declared field —
+
+  * direct rebinding         ``self._idle = [...]``
+  * element assignment       ``self._idle[i] = True``
+  * augmented assignment     ``self.busy_seconds[i] += dt``
+  * mutating method call     ``self._errors.append(e)``
+
+— is (a) lexically inside ``with self.<lock>:`` for a `locked_by` field
+(or for an `owned_by` field, since the lock also serializes), (b) inside
+a method declared ``@runs_on(<owner>)`` matching the field's `owned_by`
+owner, (c) inside ``__init__`` (construction happens-before publication),
+or (d) explicitly waived with ``@exempt(field, reason=...)``.
+
+Codes:
+
+  LCK201  locked_by field mutated without the lock held
+  LCK202  owned_by field mutated outside the owner's methods / the lock
+
+Scope: mutations through `self` inside the declaring class body.
+Mutations from outside the class (or through an alias) are the runtime
+shim's job (REPRO_TSAN=1 guarded containers — see contracts.py).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.callgraph import Index, dotted
+from repro.analysis.findings import Finding
+
+CHECKER = "locks"
+
+MUTATORS = {
+    "append", "appendleft", "extend", "extendleft", "insert", "pop",
+    "popleft", "popitem", "remove", "clear", "update", "setdefault",
+    "add", "discard", "sort", "reverse",
+}
+
+
+@dataclass
+class ClassContract:
+    lock: Optional[str] = None
+    locked_fields: Tuple[str, ...] = ()
+    owners: Dict[str, str] = field(default_factory=dict)  # field -> owner
+
+
+def _const_strs(call: ast.Call) -> List[str]:
+    return [a.value for a in call.args
+            if isinstance(a, ast.Constant) and isinstance(a.value, str)]
+
+
+def _class_contract(cls: ast.ClassDef) -> Optional[ClassContract]:
+    contract = ClassContract()
+    found = False
+    for deco in cls.decorator_list:
+        if not isinstance(deco, ast.Call):
+            continue
+        name = (dotted(deco.func) or "").split(".")[-1]
+        strs = _const_strs(deco)
+        if name == "locked_by" and len(strs) >= 2:
+            contract.lock = strs[0]
+            contract.locked_fields += tuple(strs[1:])
+            found = True
+        elif name == "owned_by" and len(strs) >= 2:
+            for f in strs[1:]:
+                contract.owners[f] = strs[0]
+            found = True
+    return contract if found else None
+
+
+def _method_markers(fn) -> Tuple[Optional[str], Dict[str, str]]:
+    """(runs_on owner, {field: exempt reason}) from method decorators."""
+    owner = None
+    waived: Dict[str, str] = {}
+    for deco in getattr(fn, "decorator_list", []):
+        if not isinstance(deco, ast.Call):
+            continue
+        name = (dotted(deco.func) or "").split(".")[-1]
+        if name == "runs_on":
+            strs = _const_strs(deco)
+            if strs:
+                owner = strs[0]
+        elif name == "exempt":
+            reason = ""
+            for kw in deco.keywords:
+                if kw.arg == "reason" and isinstance(kw.value, ast.Constant):
+                    reason = str(kw.value.value)
+            for f in _const_strs(deco):
+                waived[f] = reason
+    return owner, waived
+
+
+def _self_field(node) -> Optional[str]:
+    """The field name when `node` is self.<field>, else None."""
+    if isinstance(node, ast.Attribute) \
+            and isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _mutation_sites(fn):
+    """Yield (node, field, verb) for mutations of self.<field> inside
+    `fn`, tracking whether each site is under `with self.<lock>`."""
+
+    def visit(body, locks_held):
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # nested defs are indexed as their own functions and
+                # analyzed separately (they run later, possibly on
+                # another thread — the lexical lock does not carry over)
+                continue
+            if isinstance(stmt, ast.With):
+                held = set(locks_held)
+                for item in stmt.items:
+                    f = _self_field(item.context_expr)
+                    if f is not None:
+                        held.add(f)
+                yield from visit(stmt.body, frozenset(held))
+                continue
+            yield from scan(stmt, locks_held)
+            for attr in ("body", "orelse", "finalbody"):
+                yield from visit(getattr(stmt, attr, []), locks_held)
+            for h in getattr(stmt, "handlers", []):
+                yield from visit(h.body, locks_held)
+
+    def scan(stmt, locks_held):
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            for tgt in targets:
+                yield from target_sites(tgt, locks_held)
+        elif isinstance(stmt, ast.AugAssign):
+            yield from target_sites(stmt.target, locks_held)
+        elif isinstance(stmt, ast.Delete):
+            for tgt in stmt.targets:
+                yield from target_sites(tgt, locks_held)
+        # mutating method calls in this statement's OWN expressions; for
+        # compound statements only the header — nested statements are
+        # scanned by visit()'s recursion (walking the whole subtree here
+        # would re-report sites that sit under an inner `with self._lock`)
+        if isinstance(stmt, (ast.If, ast.While, ast.For, ast.Try)):
+            exprs = [e for e in (getattr(stmt, "test", None),
+                                 getattr(stmt, "iter", None)) if e is not None]
+        else:
+            exprs = [stmt]
+        for expr in exprs:
+            for node in ast.walk(expr):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in MUTATORS:
+                    f = _self_field(node.func.value)
+                    if f is not None:
+                        yield node, f, f".{node.func.attr}()", locks_held
+
+    def target_sites(tgt, locks_held):
+        f = _self_field(tgt)
+        if f is not None:
+            yield tgt, f, "assignment", locks_held
+            return
+        if isinstance(tgt, ast.Subscript):
+            f = _self_field(tgt.value)
+            if f is not None:
+                yield tgt, f, "element assignment", locks_held
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for e in tgt.elts:
+                yield from target_sites(e, locks_held)
+
+    yield from visit(fn.body, frozenset())
+
+
+def check(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    for mi in index.modules.values():
+        for cls_name, cls in mi.classes.items():
+            contract = _class_contract(cls)
+            if contract is None:
+                continue
+            declared = set(contract.locked_fields) | set(contract.owners)
+            for fi in mi.functions.values():
+                if fi.class_name != cls_name:
+                    continue
+                fn = fi.node
+                if fi.local == f"{cls_name}.__init__":
+                    continue   # construction happens-before publication
+                owner, waived = _method_markers(fn)
+                for node, fld, verb, locks in _mutation_sites(fn):
+                    if fld not in declared:
+                        continue
+                    if fld in waived:
+                        continue
+                    if contract.lock is not None and contract.lock in locks:
+                        continue
+                    fld_owner = contract.owners.get(fld)
+                    if fld_owner is not None and owner == fld_owner:
+                        continue
+                    if fld_owner is None:
+                        findings.append(Finding(
+                            file=mi.relpath, line=node.lineno,
+                            col=node.col_offset, code="LCK201",
+                            checker=CHECKER,
+                            message=(f"{verb} of self.{fld} without "
+                                     f"holding self.{contract.lock} "
+                                     f"(locked_by contract)"),
+                            context=fi.qualname))
+                    else:
+                        findings.append(Finding(
+                            file=mi.relpath, line=node.lineno,
+                            col=node.col_offset, code="LCK202",
+                            checker=CHECKER,
+                            message=(f"{verb} of self.{fld} outside its "
+                                     f"owner {fld_owner!r} (owned_by "
+                                     f"contract; mark the method "
+                                     f"@runs_on({fld_owner!r}) or hold "
+                                     f"the lock)"),
+                            context=fi.qualname))
+    return findings

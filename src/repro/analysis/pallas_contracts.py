@@ -1,0 +1,126 @@
+"""Checker 3: Pallas kernel contracts.
+
+Two rules the kernel layer (kernels/*.py) lives by:
+
+  PAL301  `REPRO_INTERPRET` is read outside `repro/kernels/ops.py` —
+          interpret-mode policy has exactly one reader,
+          `ops._interpret()`; raw env reads elsewhere fork the policy
+          (and miss the documented trace-time semantics).
+  PAL302  a `pl.pallas_call` grid expression calls into `jnp`/`jax`/
+          `lax` or `.item()` — grids live on the HOST and must be
+          shape-static ints (shapes, constants, `np`/`math` arithmetic),
+          never traced values.
+  PAL303  a BlockSpec index_map calls into host `np.*` or `.item()` —
+          index maps are TRACED per grid step, so traced ops (`jnp`,
+          clamps like `jnp.minimum` over scalar-prefetch refs) are fine
+          but host numpy / syncs are not.
+
+The single allowed reader is identified by file path suffix
+(`repro/kernels/ops.py`) so the rule holds verbatim when the tree is
+analyzed from a checkout root or a fixture corpus.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.callgraph import Index, dotted
+from repro.analysis.findings import Finding
+
+CHECKER = "pallas_contracts"
+
+ALLOWED_ENV_READER = "repro/kernels/ops.py"
+_TRACED_PREFIXES = ("jnp", "jax", "lax")   # banned where host-static
+_HOST_PREFIXES = ("np", "numpy")           # banned where traced
+
+
+def _reads_repro_interpret(node: ast.AST) -> bool:
+    """True for os.environ.get("REPRO_INTERPRET"), os.getenv(...), and
+    os.environ["REPRO_INTERPRET"]."""
+    if isinstance(node, ast.Call):
+        name = dotted(node.func) or ""
+        if name in ("os.environ.get", "os.getenv", "environ.get",
+                    "getenv"):
+            return any(isinstance(a, ast.Constant)
+                       and a.value == "REPRO_INTERPRET"
+                       for a in node.args)
+    if isinstance(node, ast.Subscript):
+        name = dotted(node.value) or ""
+        if name in ("os.environ", "environ"):
+            sl = node.slice
+            return isinstance(sl, ast.Constant) \
+                and sl.value == "REPRO_INTERPRET"
+    return False
+
+
+def _impure_call(expr: ast.AST, banned_prefixes):
+    """First banned-prefix call or .item() inside `expr`, else None."""
+    for node in ast.walk(expr):
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+            return node, ".item()"
+        name = dotted(node.func) or ""
+        if name.split(".")[0] in banned_prefixes:
+            return node, f"{name}(...)"
+    return None
+
+
+def check(index: Index) -> List[Finding]:
+    findings: List[Finding] = []
+    for mi in index.modules.values():
+        is_ops = mi.relpath.replace("\\", "/").endswith(ALLOWED_ENV_READER)
+        for node in ast.walk(mi.tree):
+            if not is_ops and _reads_repro_interpret(node):
+                findings.append(Finding(
+                    file=mi.relpath, line=node.lineno,
+                    col=node.col_offset, code="PAL301", checker=CHECKER,
+                    message=("raw REPRO_INTERPRET read; interpret-mode "
+                             "policy is read only via "
+                             "kernels.ops._interpret()")))
+            if isinstance(node, ast.Call):
+                callee = (dotted(node.func) or "").split(".")[-1]
+                if callee == "pallas_call":
+                    findings.extend(_check_pallas_call(mi, node))
+                elif callee == "BlockSpec":
+                    findings.extend(_check_blockspec(mi, node))
+    return findings
+
+
+def _check_pallas_call(mi, call: ast.Call) -> List[Finding]:
+    out: List[Finding] = []
+    for kw in call.keywords:
+        if kw.arg != "grid":
+            continue
+        hit = _impure_call(kw.value, _TRACED_PREFIXES)
+        if hit is not None:
+            node, what = hit
+            out.append(Finding(
+                file=mi.relpath, line=node.lineno, col=node.col_offset,
+                code="PAL302", checker=CHECKER,
+                message=(f"pallas_call grid uses {what}: grids must be "
+                         f"shape-static host integers, not traced "
+                         f"values")))
+    return out
+
+
+def _check_blockspec(mi, call: ast.Call) -> List[Finding]:
+    out: List[Finding] = []
+    candidates = []
+    if len(call.args) >= 2:
+        candidates.append(call.args[1])
+    for kw in call.keywords:
+        if kw.arg == "index_map":
+            candidates.append(kw.value)
+    for expr in candidates:
+        body = expr.body if isinstance(expr, ast.Lambda) else expr
+        hit = _impure_call(body, _HOST_PREFIXES)
+        if hit is not None:
+            node, what = hit
+            out.append(Finding(
+                file=mi.relpath, line=node.lineno, col=node.col_offset,
+                code="PAL303", checker=CHECKER,
+                message=(f"BlockSpec index_map uses {what}: index maps "
+                         f"are traced — host numpy / syncs are illegal "
+                         f"there")))
+    return out

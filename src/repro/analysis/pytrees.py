@@ -1,0 +1,110 @@
+"""Checker 4: dataclasses crossing a jit boundary must be pytrees.
+
+A bare `@dataclass` handed to (or built inside) a jitted function is a
+trace-time error at best and a silent leaf-capture at worst.  The repo's
+convention is `CacheHandle`'s: `@jax.tree_util.register_pytree_node_class`
+with static aux data riding in the treedef.
+
+  PYT401  dataclass CONSTRUCTED inside a traced function without a
+          pytree registration (the constructed value is what crosses
+          the boundary back out; annotations alone don't count — a
+          hashable config passed as a static argument is legal)
+
+"Traced" is `callgraph.Index.traced_functions` — everything reachable
+from a `jax.jit` / `pl.pallas_call` boundary.  A registration counts if
+the class is decorated with `register_pytree_node_class` /
+`register_dataclass`, or the module calls `register_pytree_node` /
+`register_pytree_with_keys` / `register_dataclass` with the class.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.callgraph import Index, dotted
+from repro.analysis.findings import Finding
+
+CHECKER = "pytrees"
+
+_REGISTER_DECOS = {"register_pytree_node_class", "register_dataclass"}
+_REGISTER_CALLS = {"register_pytree_node", "register_pytree_with_keys",
+                   "register_dataclass", "register_pytree_node_class"}
+
+
+def _dataclasses(mi) -> Dict[str, ast.ClassDef]:
+    out = {}
+    for name, cls in mi.classes.items():
+        for deco in cls.decorator_list:
+            target = deco.func if isinstance(deco, ast.Call) else deco
+            if (dotted(target) or "").split(".")[-1] == "dataclass":
+                out[name] = cls
+    return out
+
+
+def _registered(mi, cls: ast.ClassDef) -> bool:
+    for deco in cls.decorator_list:
+        target = deco.func if isinstance(deco, ast.Call) else deco
+        if (dotted(target) or "").split(".")[-1] in _REGISTER_DECOS:
+            return True
+    for node in ast.walk(mi.tree):
+        if isinstance(node, ast.Call) \
+                and (dotted(node.func) or "").split(".")[-1] \
+                in _REGISTER_CALLS \
+                and node.args and isinstance(node.args[0], ast.Name) \
+                and node.args[0].id == cls.name:
+            return True
+    return False
+
+
+def check(index: Index) -> List[Finding]:
+    # (module, class name) -> registered?
+    dataclass_reg: Dict[Tuple[str, str], bool] = {}
+    for mi in index.modules.values():
+        for name, cls in _dataclasses(mi).items():
+            dataclass_reg[(mi.modname, name)] = _registered(mi, cls)
+
+    findings: List[Finding] = []
+    reported: Set[Tuple[str, str, str]] = set()
+    roots = index.jit_roots()
+    for qual, fi in sorted(index.traced_functions(roots).items()):
+        mi = fi.module
+        for node in ast.walk(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted(node.func)
+            if not name:
+                continue
+            key = _resolve_class(index, mi, name)
+            if key is None or key not in dataclass_reg:
+                continue
+            if dataclass_reg[key]:
+                continue
+            dedup = (qual, key[0], key[1])
+            if dedup in reported:
+                continue
+            reported.add(dedup)
+            findings.append(Finding(
+                file=mi.relpath, line=node.lineno, col=node.col_offset,
+                code="PYT401", checker=CHECKER,
+                message=(f"dataclass {key[1]} crosses a jit boundary but "
+                         f"is not a registered pytree "
+                         f"(@jax.tree_util.register_pytree_node_class)"),
+                context=qual))
+    return findings
+
+
+def _resolve_class(index: Index, mi, name: str):
+    """(modname, classname) for a class referenced as `name` in `mi`."""
+    if name in mi.classes:
+        return (mi.modname, name)
+    parts = name.split(".")
+    target = mi.imports.get(parts[0])
+    if target is None:
+        return None
+    full = ".".join([target] + parts[1:])
+    bits = full.split(".")
+    modname, clsname = ".".join(bits[:-1]), bits[-1]
+    m = index.modules.get(modname)
+    if m is not None and clsname in m.classes:
+        return (modname, clsname)
+    return None

@@ -1,0 +1,29 @@
+"""repro-lint orchestration: build one Index, run every checker.
+
+`run_lint(root)` is the library entry point (tests/test_analysis.py
+drives it over fixture corpora); `scripts/run_lint.py` is the CLI with
+the baseline workflow.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis import (jit_hygiene, locks, pallas_contracts,
+                            pytrees)
+from repro.analysis.callgraph import Index
+from repro.analysis.findings import Finding
+
+CHECKERS = (jit_hygiene, locks, pallas_contracts, pytrees)
+
+
+def run_lint(root, files: Optional[List[Path]] = None,
+             checkers=CHECKERS) -> List[Finding]:
+    """Analyze every .py file under `root` (or just `files`, which must
+    live under it) and return sorted findings."""
+    index = Index.build(root, files=files)
+    findings: List[Finding] = []
+    for checker in checkers:
+        findings.extend(checker.check(index))
+    findings.sort(key=lambda f: (f.file, f.line, f.col, f.code))
+    return findings

@@ -26,7 +26,6 @@ import re
 import sys
 import time
 import traceback
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -38,7 +38,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.launch.mesh import make_local_mesh
 from repro.models import api
 from repro.parallel import context as pctx
 

@@ -16,10 +16,8 @@ from __future__ import annotations
 import argparse
 import logging
 import time
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
@@ -30,9 +28,8 @@ from repro.models import api, specs
 from repro.optim import adamw
 from repro.optim.compress import init_feedback, tree_compress_with_feedback
 from repro.parallel import context as pctx
-from repro.parallel.sharding import axes_for_mesh, data_shards, model_shards
-from repro.runtime.fault_tolerance import (FaultInjector, StragglerMonitor,
-                                           run_with_restarts)
+from repro.parallel.sharding import axes_for_mesh, model_shards
+from repro.runtime.fault_tolerance import StragglerMonitor, run_with_restarts
 
 log = logging.getLogger("repro.train")
 

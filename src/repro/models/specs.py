@@ -8,11 +8,10 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
 from jax.sharding import PartitionSpec as P
 from jax.tree_util import tree_map_with_path, DictKey
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 from repro.parallel.sharding import Axes
 
 

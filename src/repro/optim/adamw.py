@@ -10,8 +10,7 @@ never lives replicated across data-parallel replicas).
 """
 from __future__ import annotations
 
-import math
-from typing import Callable, NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -106,7 +105,6 @@ def apply_updates(params: dict, grads: dict, opt: dict,
 def zero1_specs(pspecs, params, data_axis: str = "data"):
     """Optimizer-state specs: param spec + 'data' on the first replicated,
     divisible dim (the classic ZeRO-1 layout under GSPMD)."""
-    import numpy as np
 
     def rule(spec: P, leaf):
         entries = list(spec) + [None] * (leaf.ndim - len(spec))

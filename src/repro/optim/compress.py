@@ -14,7 +14,7 @@ property and convergence on a quadratic problem.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

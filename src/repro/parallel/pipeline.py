@@ -15,7 +15,6 @@ the sequential reference on a multi-device host mesh.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

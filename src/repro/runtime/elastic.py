@@ -13,10 +13,10 @@ scheduler (tests inject them).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Optional
 
 import jax
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import NamedSharding
 
 from repro.launch.mesh import make_elastic_mesh
 

@@ -54,6 +54,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import (CheckedCondition, GuardedDeque,
+                                      GuardedDict, GuardedList, locked_by,
+                                      owned_by, runs_on, tsan_enabled)
 from repro.serving import scheduler as sched
 
 EXEC_MODES = ("sequential", "threaded", "sharded")
@@ -188,6 +191,8 @@ class SequentialExecutor(ReplicaExecutor):
         self.wall_seconds += time.perf_counter() - t0
 
 
+@locked_by("_cond", "_idle", "_errors", "busy_seconds", "_stop")
+@owned_by("router", "_threads", "wall_seconds")
 class ThreadedExecutor(ReplicaExecutor):
     """One free-running worker thread per replica.
 
@@ -224,15 +229,47 @@ class ThreadedExecutor(ReplicaExecutor):
 
     def __init__(self, engines):
         super().__init__(engines)
-        self._cond = threading.Condition(threading.RLock())
+        # REPRO_TSAN=1 (read once here, like REPRO_INTERPRET at trace
+        # time): the Condition learns who holds it and the annotated
+        # mutable state asserts the lock/owner discipline on every
+        # mutation — the tier-1 suite doubles as a thread sanitizer
+        self._tsan = tsan_enabled()
+        self._cond = (CheckedCondition() if self._tsan
+                      else threading.Condition(threading.RLock()))
         self._router_wake = threading.Event()
         self._idle = [True] * len(self.engines)
         self._errors: List[BaseException] = []
         self._stop = False
         self._threads: Optional[List[threading.Thread]] = None
+        if self._tsan:
+            self._idle = GuardedList(self._idle, cond=self._cond,
+                                     label="ThreadedExecutor._idle")
+            self._errors = GuardedList(cond=self._cond,
+                                       label="ThreadedExecutor._errors")
+            self.busy_seconds = GuardedList(
+                self.busy_seconds, cond=self._cond,
+                label="ThreadedExecutor.busy_seconds")
+            for i, eng in enumerate(self.engines):
+                eng.queue = GuardedDeque(eng.queue, cond=self._cond,
+                                         label=f"engines[{i}].queue")
+                eng.done = GuardedDict(eng.done, cond=self._cond,
+                                       label=f"engines[{i}].done")
+
+    def _own_engine(self, i: int, thread):
+        """TSAN bookkeeping: resolve the 'worker' role for replica `i` to
+        a live thread (claim) or back to quiescent (None — anyone may
+        mutate, e.g. warmup/stats on the main thread between drives)."""
+        if not self._tsan:
+            return
+        eng = self.engines[i]
+        for obj in (eng.queue, eng.done):
+            set_owner = getattr(obj, "set_owner", None)
+            if set_owner is not None:
+                set_owner(thread)
 
     # -- dispatch ------------------------------------------------------------
 
+    @runs_on("router")
     def dispatch(self, index, req):
         with self._cond:
             self.engines[index].submit(req)
@@ -240,31 +277,38 @@ class ThreadedExecutor(ReplicaExecutor):
 
     # -- worker protocol -----------------------------------------------------
 
+    @runs_on("router")
     def _ensure_threads(self):
         """Start (or re-staff) one worker per replica.  A worker exits
         when its engine raises (the error re-raises in drive), so a
         later run() must replace dead workers; parked live workers are
         kept."""
-        old = self._threads or [None] * len(self.engines)
-        if all(t is not None and t.is_alive() for t in old):
-            return
-        if not any(t is not None and t.is_alive() for t in old):
-            self._stop = False   # fully stopped: safe to restart
-        if self._stop:
-            return               # close() timed out on a live worker
-        self._threads = []
-        for i in range(len(self.engines)):
-            t = old[i]
-            if t is None or not t.is_alive():
-                t = threading.Thread(target=self._worker, args=(i,),
-                                     daemon=True, name=f"replica-{i}")
-                t.start()
-            self._threads.append(t)
+        with self._cond:
+            old = self._threads or [None] * len(self.engines)
+            if all(t is not None and t.is_alive() for t in old):
+                return
+            if not any(t is not None and t.is_alive() for t in old):
+                self._stop = False   # fully stopped: safe to restart
+            if self._stop:
+                return               # close() timed out on a live worker
+            self._threads = []
+            for i in range(len(self.engines)):
+                t = old[i]
+                if t is None or not t.is_alive():
+                    # start() under the lock is safe: the worker's first
+                    # action is to acquire the cond, so it just blocks
+                    # until we release
+                    t = threading.Thread(target=self._worker, args=(i,),
+                                         daemon=True, name=f"replica-{i}")
+                    t.start()
+                self._threads.append(t)
 
+    @runs_on("worker")
     def _worker(self, i: int):
         eng = self.engines[i]
         while True:
             with self._cond:
+                self._own_engine(i, None)     # parked: engine quiescent
                 while not self._stop and not self.has_work(eng):
                     self._idle[i] = True
                     self._router_wake.set()
@@ -272,6 +316,7 @@ class ThreadedExecutor(ReplicaExecutor):
                 if self._stop:
                     return
                 self._idle[i] = False
+                self._own_engine(i, threading.current_thread())
             while True:                      # step outside the lock
                 done0 = len(eng.done)
                 queued0 = len(eng.queue)
@@ -282,9 +327,15 @@ class ThreadedExecutor(ReplicaExecutor):
                     with self._cond:
                         self._errors.append(e)
                         self._idle[i] = True
+                        self._own_engine(i, None)
                         self._router_wake.set()
                     return
-                self.busy_seconds[i] += time.perf_counter() - t0
+                dt = time.perf_counter() - t0
+                with self._cond:
+                    # makespan code reads busy_seconds while workers run;
+                    # an unlocked += is a lost-update race between the
+                    # read-modify-write and reset_timing's rebind
+                    self.busy_seconds[i] += dt
                 # wake the router only on events a policy can act on — a
                 # retirement freed a lane, or an admission drained this
                 # replica's queue.  Signaling every step would have the
@@ -300,6 +351,7 @@ class ThreadedExecutor(ReplicaExecutor):
 
     # -- drive ---------------------------------------------------------------
 
+    @runs_on("router")
     def drive(self, router, max_steps: int):
         """Drain the router: dispatch from this (the router's) thread,
         let workers free-run, return when no queued or resident work is
@@ -341,6 +393,18 @@ class ThreadedExecutor(ReplicaExecutor):
         finally:
             self.wall_seconds += time.perf_counter() - t0
 
+    @runs_on("router")
+    def reset_timing(self):
+        """Base behavior under the lock; under TSAN rebinding replaced
+        the guarded busy_seconds with a plain list, so re-wrap."""
+        with self._cond:
+            super().reset_timing()
+            if self._tsan:
+                self.busy_seconds = GuardedList(
+                    self.busy_seconds, cond=self._cond,
+                    label="ThreadedExecutor.busy_seconds")
+
+    @runs_on("router")
     def close(self):
         with self._cond:
             self._stop = True
@@ -353,8 +417,9 @@ class ThreadedExecutor(ReplicaExecutor):
             # exits at the next step boundary instead of resurrecting —
             # restarting now could put two workers on one engine
             return
-        self._threads = None
-        self._stop = False
+        with self._cond:
+            self._threads = None
+            self._stop = False
 
 
 class ShardedExecutor(ReplicaExecutor):

@@ -61,6 +61,7 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 
+from repro.analysis.contracts import owned_by, runs_on
 from repro.serving.parallel_exec import EXEC_MODES, get_executor
 from repro.serving.scheduler import Request, ServingEngine
 
@@ -149,6 +150,7 @@ def get_policy(name: Union[str, RoutePolicy]) -> RoutePolicy:
                      f"expected one of {POLICIES}")
 
 
+@owned_by("router", "queue", "dispatch_log", "steps")
 class Router:
     """Front-end over N independent `ServingEngine` replicas.
 
@@ -230,10 +232,12 @@ class Router:
 
     # -- request flow --------------------------------------------------------
 
+    @runs_on("router")
     def submit(self, req: Request):
         req.submitted = req.submitted or time.time()
         self.queue.append(req)
 
+    @runs_on("router")
     def _dispatch(self):
         """Offer the queue head to the policy until it defers (FIFO:
         requests are never dispatched around a deferred head)."""
@@ -245,6 +249,7 @@ class Router:
             self.replicas[r].submit(req)
             self.dispatch_log.append((req.uid, r))
 
+    @runs_on("router")
     def step(self):
         """One lockstep router tick: dispatch what the policy will place,
         then have the executor advance every replica that has work one
@@ -347,6 +352,7 @@ class Router:
         t1 = max(r.finished for r in done.values())
         return toks / max(t1 - t0, 1e-9)
 
+    @runs_on("router")
     def reset_counters(self):
         """Zero timing/step counters after warmup so measured windows are
         steady-state (the router analogue of warmup_engine's reset)."""

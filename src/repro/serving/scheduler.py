@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import exempt, owned_by, runs_on
 from repro.models import api
 from repro.serving import kv_cache
 from repro.serving.kv_cache import CacheHandle
@@ -192,6 +193,9 @@ def sample_tokens(logits: jax.Array, keys: jax.Array, temps: jax.Array,
     return jnp.where(temps > 0, samp, greedy)
 
 
+@owned_by("worker", "queue", "done", "slots", "cache", "steps",
+          "decode_seconds", "decode_tokens", "_next_tok", "_draws",
+          "_warned_truncation")
 class ServingEngine:
     """Continuous batching over a fixed slot count.
 
@@ -291,6 +295,11 @@ class ServingEngine:
 
     # -- public API ---------------------------------------------------------
 
+    @exempt("queue", reason="cross-thread entry point: the dispatching "
+            "executor serializes it (ThreadedExecutor.dispatch holds "
+            "_cond) or no drive is in flight; deque.append is atomic "
+            "under the GIL and the REPRO_TSAN guarded deque still "
+            "covers the site")
     def submit(self, req: Request):
         # keep an earlier stamp if one exists: a front-end router stamps
         # submission time at ITS queue, and latency should span the whole
@@ -298,6 +307,7 @@ class ServingEngine:
         req.submitted = req.submitted or time.time()
         self.queue.append(req)
 
+    @runs_on("worker")
     def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
         while (self.queue or any(not s.free for s in self.slots)) \
                 and self.steps < max_steps:
@@ -359,6 +369,7 @@ class ServingEngine:
                 return b
         return self.buckets[-1]      # longer prompts truncate to max bucket
 
+    @runs_on("worker")
     def _admit(self):
         """Admit queued prompts into free lanes via backend cache surgery.
 
@@ -418,6 +429,7 @@ class ServingEngine:
         return live_page_bound(int(pos.max()), self.cache.page_size,
                                self.max_seq // self.cache.page_size)
 
+    @runs_on("worker")
     def warm_decode(self, sample: bool = False):
         """Pre-compile the jitted decode step for every static live-page
         bucket this engine can reach (_live_pages yields the pow2 series
@@ -445,6 +457,7 @@ class ServingEngine:
                     self.params, self.dsg, tok, self.cache, pos, free_mask,
                     0, live, self._base_key, 0, temps, top_ps)
 
+    @runs_on("worker")
     def begin_step(self) -> Optional[StepPlan]:
         """Host half of a decode step: admit queued prompts, emit each
         active lane's pending token, grow page tables for this step's
@@ -496,6 +509,7 @@ class ServingEngine:
                         live_pages=self._live_pages(pos),
                         sample=bool((temps > 0).any()))
 
+    @runs_on("worker")
     def commit_step(self, plan: StepPlan, next_tok: np.ndarray,
                     seconds: float):
         """Record a decode result: latch each lane's next input token,
@@ -521,6 +535,7 @@ class ServingEngine:
                 slot.pos = 0
                 self.cache = self.backend.free(self.cache, i)
 
+    @runs_on("worker")
     def step(self):
         """One full engine step: begin (host) -> jitted decode (device)
         -> commit (host).  Replica executors that batch the device half

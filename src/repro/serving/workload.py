@@ -103,6 +103,20 @@ def warmup_router(router: Router, vocab: int, warm_temp: float = 0.0,
     router.reset_counters()
 
 
+def latency_stats(done: Dict[int, Request]) -> Dict[str, float]:
+    """p50/p95 end-to-end latency (submit -> finish) over finished
+    requests.  Raises ValueError when nothing finished: a silent 0.0
+    percentile reads as an impossibly fast pipeline in dashboards —
+    same contract as ServingEngine.throughput() (PR 4)."""
+    if not done:
+        raise ValueError(
+            "latency_stats() needs at least one finished request; "
+            "drive the engine/router before reading latency percentiles")
+    lat = np.array(sorted(r.finished - r.submitted for r in done.values()))
+    return {"p50_s": float(np.percentile(lat, 50)),
+            "p95_s": float(np.percentile(lat, 95))}
+
+
 def run_workload(cfg, params, dsg, requests: List[Request], *,
                  admission: str = "overlap", n_slots: int = 4,
                  max_seq: int = 384, prompt_bucket: int = 256,
@@ -153,7 +167,6 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
             # pinned by parked daemon threads
             runner.close()
     toks = sum(len(r.output) for r in done.values())
-    lat = np.array(sorted(r.finished - r.submitted for r in done.values()))
     stats = {
         "admission": admission,
         "cache_backend": cache_backend,
@@ -163,15 +176,17 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
         "truncated": sum(r.truncated for r in done.values()),
         "wall_s": wall,
         "tok_per_s": toks / max(wall, 1e-9),
-        "p50_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
-        "p95_s": float(np.percentile(lat, 95)) if len(lat) else 0.0,
+        # raises on an empty result set instead of reporting 0.0
+        # percentiles — a measured workload that finished nothing is an
+        # error, not a very fast run
+        **latency_stats(done),
     }
     if stepper is not None:
         stats.update({
             "cache_bytes": int(stepper.backend.resident_bytes(stepper.cache)),
-            # decode_tok_per_s() raises before any token decodes; an empty
-            # request list is a legal (if pointless) workload, mirroring
-            # the `if len(lat)` guards above and the router branch below
+            # decode_tok_per_s() raises before any token decodes, but a
+            # request can finish on its admission token alone (max_new=1)
+            # with zero decode steps — that run is legal, so guard
             "decode_tok_per_s": stepper.decode_tok_per_s()
                                 if stepper.decode_tokens else 0.0,
             "steps": stepper.steps,

@@ -8,7 +8,6 @@ import pytest
 pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt); skip, don't error
 from hypothesis import given, settings, strategies as st
 
-from repro.core import drs as drs_mod
 from repro.kernels import drs_search, dsg_ffn, ops, ref
 
 TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),

@@ -9,7 +9,6 @@ import pytest
 pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt); skip, don't error
 from hypothesis import given, settings, strategies as st
 
-from repro.configs.base import ModelConfig
 from repro.core.dsg_linear import DSGConfig
 from repro.models import attention as attn
 from repro.models import mamba2 as m2

@@ -20,7 +20,7 @@ import pytest
 from harness import (assert_streams_equal, engine_spec, make_engine_parts,
                      mixed_traffic, run_and_collect)
 from repro.parallel.sharding import replica_mesh
-from repro.serving.parallel_exec import (EXEC_MODES, ReplicaProxy,
+from repro.serving.parallel_exec import (ReplicaProxy,
                                          SequentialExecutor, get_executor)
 from repro.serving.router import Router
 from repro.serving.scheduler import Request
