@@ -35,9 +35,11 @@ divergence or a missed traffic gate.
 from __future__ import annotations
 
 import argparse
-import json
+import time
 
 import jax
+
+from common import bench_envelope, gate, write_bench
 
 from repro import configs
 from repro.models import api
@@ -169,6 +171,7 @@ def main():
     ap.add_argument("--out", default="BENCH_paged_decode.json")
     args = ap.parse_args()
 
+    t0 = time.time()
     results = run(args)
     window_mb = results["paged-window-model"]["modeled_kv_mb"]
     print(f"{'variant':>13} {'ms/step':>9} {'KV MB/step':>11} "
@@ -181,24 +184,34 @@ def main():
     print(f"{'paged-window':>13} {'-':>9} {'-':>11} {window_mb:>12.2f} "
           f"  (historical whole-window gather)")
 
-    # explicit raises, not asserts: CI regression gates, survive python -O
-    if not (results["dense"]["outputs"] == results["paged-xla"]["outputs"]
-            == results["paged-kernel"]["outputs"]):
-        raise SystemExit("FAIL: decode executors emit diverging streams")
+    streams_ok = (results["dense"]["outputs"]
+                  == results["paged-xla"]["outputs"]
+                  == results["paged-kernel"]["outputs"])
     ratio = results["paged-kernel"]["modeled_kv_mb"] / window_mb
     print(f"kernel / whole-window modeled KV bytes = {ratio:.3f}")
-    if ratio > 0.6:
-        raise SystemExit(
-            f"FAIL: paged kernel must cut modeled decode KV HBM bytes to "
-            f"<= 0.6x the whole-window gather (got {ratio:.3f}x)")
-    print("streams identical across executors ✓")
 
     payload = {k: {kk: vv for kk, vv in v.items() if kk != "outputs"}
                for k, v in results.items()}
     payload["kernel_vs_window_ratio"] = ratio
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"wrote {args.out}")
+    gates = [
+        gate("decode executors emit identical streams", 1.0,
+             float(streams_ok), streams_ok),
+        gate("paged kernel modeled decode KV HBM bytes <= 0.6x the "
+             "whole-window gather", 0.6, ratio, ratio <= 0.6),
+    ]
+    # write first: a red run leaves a diagnosable artifact
+    write_bench(args.out, bench_envelope(
+        "paged_decode", gates=gates, ratio=ratio, t_start=t0,
+        results=payload))
+
+    # explicit raises, not asserts: CI regression gates, survive python -O
+    if not streams_ok:
+        raise SystemExit("FAIL: decode executors emit diverging streams")
+    print("streams identical across executors ✓")
+    if ratio > 0.6:
+        raise SystemExit(
+            f"FAIL: paged kernel must cut modeled decode KV HBM bytes to "
+            f"<= 0.6x the whole-window gather (got {ratio:.3f}x)")
 
 
 if __name__ == "__main__":

@@ -42,10 +42,11 @@ measured tok/s.  Emits BENCH_router.json.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
+
+from common import bench_envelope, gate, write_bench
 
 from repro import configs
 from repro.models import api
@@ -260,6 +261,7 @@ def main():
 
     if args.exec_mode is not None:
         out = args.out or "BENCH_router_exec.json"
+        t0 = time.time()
         results = run_exec_gate(args)
         ratios = results.pop("paired_ratios")
         print(f"{'executor':>12} {'tok/s':>8} {'wall s':>8} "
@@ -268,22 +270,9 @@ def main():
             print(f"{name:>12} {st['tok_per_s']:>8.1f} "
                   f"{st['wall_s']:>8.2f} {st['makespan_s']:>11.2f} "
                   f"{str(st['makespan_measured']):>9}")
-        # explicit raises, not asserts: CI gates, survive python -O
-        if (results["sequential"]["outputs"]
-                != results[args.exec_mode]["outputs"]):
-            raise SystemExit(
-                f"FAIL: {args.exec_mode} executor emits diverging merged "
-                f"token streams (executor invariance broken)")
-        print(f"merged greedy streams identical across executors ✓")
+        streams_ok = (results["sequential"]["outputs"]
+                      == results[args.exec_mode]["outputs"])
         speedup = ratios[-1]                   # best paired ratio
-        print(f"{args.exec_mode} / sequential measured throughput: "
-              f"{speedup:.2f}x (best paired repeat; all: "
-              f"{' '.join(f'{r:.2f}' for r in ratios)})")
-        if args.exec_mode == "threaded" and speedup < args.exec_gate:
-            raise SystemExit(
-                f"FAIL: threaded executor must reach >= "
-                f"{args.exec_gate}x sequential measured tok/s on skewed "
-                f"traffic (got {speedup:.2f}x)")
         payload = {name: {k: v for k, v in st.items() if k != "outputs"}
                    for name, st in results.items()}
         payload["paired_ratios"] = ratios
@@ -296,12 +285,35 @@ def main():
                              "prompt_bucket": args.exec_prompt_bucket,
                              "cache_backend": args.cache_backend,
                              "exec_mode": args.exec_mode}
-        with open(out, "w") as f:
-            json.dump(payload, f, indent=2)
-        print(f"wrote {out}")
+        gates = [gate(f"{args.exec_mode} executor merged streams match "
+                      f"sequential", 1.0, float(streams_ok), streams_ok)]
+        if args.exec_mode == "threaded":   # sharded ratio is diagnostic
+            gates.append(gate(
+                f"threaded >= {args.exec_gate}x sequential measured "
+                f"tok/s (best paired repeat)", args.exec_gate, speedup,
+                speedup >= args.exec_gate))
+        # write first: a red run leaves a diagnosable artifact
+        write_bench(out, bench_envelope(
+            "router_exec", gates=gates, ratio=speedup, t_start=t0,
+            results=payload))
+        # explicit raises, not asserts: CI gates, survive python -O
+        if not streams_ok:
+            raise SystemExit(
+                f"FAIL: {args.exec_mode} executor emits diverging merged "
+                f"token streams (executor invariance broken)")
+        print(f"merged greedy streams identical across executors ✓")
+        print(f"{args.exec_mode} / sequential measured throughput: "
+              f"{speedup:.2f}x (best paired repeat; all: "
+              f"{' '.join(f'{r:.2f}' for r in ratios)})")
+        if args.exec_mode == "threaded" and speedup < args.exec_gate:
+            raise SystemExit(
+                f"FAIL: threaded executor must reach >= "
+                f"{args.exec_gate}x sequential measured tok/s on skewed "
+                f"traffic (got {speedup:.2f}x)")
         return
 
     out = args.out or "BENCH_router.json"
+    t0 = time.time()
     results = run(args)
     print(f"{'policy':>12} {'par tok/s':>10} {'makespan s':>11} "
           f"{'busy s/replica':>24} {'heavy/replica':>14}")
@@ -311,29 +323,38 @@ def main():
         print(f"{name:>12} {st['parallel_tok_per_s']:>10.1f} "
               f"{st['makespan_s']:>11.2f} {busy:>24} {heavy:>14}")
 
-    # explicit raises, not asserts: CI regression gates, survive python -O
-    if results["round_robin"]["outputs"] != results["least_queue"]["outputs"]:
-        raise SystemExit(
-            "FAIL: routing policies emit diverging merged token streams "
-            "(replica-count invariance broken)")
-    print("merged greedy streams identical across policies ✓")
+    streams_ok = (results["round_robin"]["outputs"]
+                  == results["least_queue"]["outputs"])
     speedup = (results["least_queue"]["parallel_tok_per_s"]
                / results["round_robin"]["parallel_tok_per_s"])
-    print(f"least_queue / round_robin parallel throughput: {speedup:.2f}x")
-    if speedup < 1.15:
-        raise SystemExit(
-            f"FAIL: least_queue must reach >= 1.15x round_robin parallel "
-            f"tok/s on skewed traffic (got {speedup:.2f}x)")
-
     payload = {name: {k: v for k, v in st.items() if k != "outputs"}
                for name, st in results.items()}
     payload["least_queue_vs_round_robin"] = speedup
     payload["config"] = {"replicas": args.replicas, "slots": args.slots,
                          "requests": args.requests,
                          "cache_backend": args.cache_backend}
-    with open(out, "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"wrote {out}")
+    gates = [
+        gate("routing policies emit identical merged token streams",
+             1.0, float(streams_ok), streams_ok),
+        gate("least_queue >= 1.15x round_robin modeled parallel tok/s "
+             "on skewed traffic", 1.15, speedup, speedup >= 1.15),
+    ]
+    # write first: a red run leaves a diagnosable artifact
+    write_bench(out, bench_envelope(
+        "router", gates=gates, ratio=speedup, t_start=t0,
+        results=payload))
+
+    # explicit raises, not asserts: CI regression gates, survive python -O
+    if not streams_ok:
+        raise SystemExit(
+            "FAIL: routing policies emit diverging merged token streams "
+            "(replica-count invariance broken)")
+    print("merged greedy streams identical across policies ✓")
+    print(f"least_queue / round_robin parallel throughput: {speedup:.2f}x")
+    if speedup < 1.15:
+        raise SystemExit(
+            f"FAIL: least_queue must reach >= 1.15x round_robin parallel "
+            f"tok/s on skewed traffic (got {speedup:.2f}x)")
 
 
 if __name__ == "__main__":

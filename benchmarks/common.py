@@ -1,15 +1,64 @@
 """Shared harness for the paper-reproduction benchmarks: a small MLP
 classifier (the paper's MLP/FASHION analogue — no datasets ship offline,
 so a deterministic Gaussian-cluster task stands in) and a small LM, each
-with pluggable DSG selection strategy (drs | oracle | random | none)."""
+with pluggable DSG selection strategy (drs | oracle | random | none) —
+plus the BENCH_*.json envelope every gated benchmark emits
+(scripts/check_bench.py validates committed artifacts against it)."""
 from __future__ import annotations
 
+import datetime
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import double_mask, drs, masks, projection
+
+
+# -- BENCH_*.json envelope ---------------------------------------------------
+#
+# Every gated benchmark writes the same top-level shape so dashboards and
+# scripts/check_bench.py never special-case a file:
+#
+#   {"name":       "<benchmark id>",
+#    "gates":      [{"description", "threshold", "value", "passed"}, ...],
+#    "ratio":      <headline ratio the gates guard>,
+#    "timestamps": {"start": <iso8601>, "end": <iso8601>},
+#    "results":    {<benchmark-specific payload>}}
+#
+# Benchmark-specific numbers all live under "results"; the envelope keys
+# are the stable cross-benchmark contract.
+
+def gate(description: str, threshold: float, value: float,
+         passed: bool) -> dict:
+    """One CI gate entry: what was checked, against what, and the verdict
+    (recorded even on failure so a red run leaves a diagnosable file)."""
+    return {"description": description, "threshold": float(threshold),
+            "value": float(value), "passed": bool(passed)}
+
+
+def bench_envelope(name: str, *, gates: list, ratio: float,
+                   t_start: float, results: dict) -> dict:
+    """Wrap a benchmark's payload in the shared BENCH_*.json envelope.
+    `t_start` is the time.time() captured before the measured runs; the
+    end timestamp is stamped here."""
+    now = datetime.datetime.now(datetime.timezone.utc)
+    start = datetime.datetime.fromtimestamp(t_start,
+                                            datetime.timezone.utc)
+    return {"name": name,
+            "gates": list(gates),
+            "ratio": float(ratio),
+            "timestamps": {"start": start.isoformat(),
+                           "end": now.isoformat()},
+            "results": results}
+
+
+def write_bench(path: str, envelope: dict):
+    with open(path, "w") as f:
+        json.dump(envelope, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path}")
 
 
 def make_cluster_data(key, n_classes=16, dim=64, n_per_class=64,

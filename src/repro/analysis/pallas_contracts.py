@@ -14,10 +14,19 @@ Two rules the kernel layer (kernels/*.py) lives by:
           index maps are TRACED per grid step, so traced ops (`jnp`,
           clamps like `jnp.minimum` over scalar-prefetch refs) are fine
           but host numpy / syncs are not.
+  PAL304  a `pl.pallas_call` outside `kernels/` hardcodes `interpret=`
+          to a constant — interpret-mode policy flows from
+          `kernels.ops._interpret()` (PAL301's single reader) down
+          through the `kernels/*.py` wrappers as a parameter; a literal
+          `interpret=True/False` elsewhere pins a kernel to one backend
+          and silently ignores `REPRO_INTERPRET`.  Kernel modules may
+          default the kwarg (`interpret: bool = False` threads fine);
+          call sites everywhere else must pass a variable.
 
 The single allowed reader is identified by file path suffix
-(`repro/kernels/ops.py`) so the rule holds verbatim when the tree is
-analyzed from a checkout root or a fixture corpus.
+(`repro/kernels/ops.py`), and PAL304's kernel layer by a `kernels/`
+path component, so the rules hold verbatim when the tree is analyzed
+from a checkout root or a fixture corpus.
 """
 from __future__ import annotations
 
@@ -66,6 +75,11 @@ def _impure_call(expr: ast.AST, banned_prefixes):
     return None
 
 
+def _in_kernels(relpath: str) -> bool:
+    path = relpath.replace("\\", "/")
+    return "kernels/" in path.rsplit("/", 1)[0] + "/"
+
+
 def check(index: Index) -> List[Finding]:
     findings: List[Finding] = []
     for mi in index.modules.values():
@@ -82,6 +96,8 @@ def check(index: Index) -> List[Finding]:
                 callee = (dotted(node.func) or "").split(".")[-1]
                 if callee == "pallas_call":
                     findings.extend(_check_pallas_call(mi, node))
+                    if not _in_kernels(mi.relpath):
+                        findings.extend(_check_interpret_literal(mi, node))
                 elif callee == "BlockSpec":
                     findings.extend(_check_blockspec(mi, node))
     return findings
@@ -101,6 +117,20 @@ def _check_pallas_call(mi, call: ast.Call) -> List[Finding]:
                 message=(f"pallas_call grid uses {what}: grids must be "
                          f"shape-static host integers, not traced "
                          f"values")))
+    return out
+
+
+def _check_interpret_literal(mi, call: ast.Call) -> List[Finding]:
+    out: List[Finding] = []
+    for kw in call.keywords:
+        if kw.arg == "interpret" and isinstance(kw.value, ast.Constant):
+            out.append(Finding(
+                file=mi.relpath, line=kw.value.lineno,
+                col=kw.value.col_offset, code="PAL304", checker=CHECKER,
+                message=(f"pallas_call outside kernels/ hardcodes "
+                         f"interpret={kw.value.value!r}; interpret-mode "
+                         f"policy flows from kernels.ops._interpret() — "
+                         f"thread it as a variable")))
     return out
 
 

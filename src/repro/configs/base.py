@@ -67,6 +67,11 @@ class ModelConfig:
                                      # (Pallas paged_attention, interpret
                                      # on CPU), "xla" (bounded gather
                                      # fallback), "auto" (kernel on TPU)
+    dsg_ffn_apply: str = "auto"      # group-CSR serving FFN executor:
+                                     # "dense" (masked-dense reference),
+                                     # "xla" (bounded gather), "kernel"
+                                     # (Pallas CSR walk), "auto" (kernel
+                                     # on TPU) — see core/dsg_linear.swiglu_csr
     microbatches: int = 1            # gradient-accumulation microbatches
                                      # (remat stash lives per-microbatch:
                                      # peak activation memory / microbatches)

@@ -221,6 +221,83 @@ def swiglu_dsg_gather_sharded(p: dict, x: jax.Array, state: dict,
     )(x, p["w_gate"], p["w_up"], p["w_down"], state["r"], state["fw"])
 
 
+# ---------------------------------------------------------------------------
+# group-CSR serving paths (core/sparse_mask.py representation)
+# ---------------------------------------------------------------------------
+
+def swiglu_csr_masked(p: dict, x: jax.Array, idx: jax.Array,
+                      counts: jax.Array, *, block: int) -> jax.Array:
+    """Masked-dense reference for a per-lane CSR selection: expand the
+    index list back to a dense group mask and run the full matmuls — zero
+    compute saving, the bitwise baseline the gather/kernel paths are
+    pinned against.  x (B, S, d), idx (B, K), counts (B,)."""
+    from repro.core import sparse_mask
+    f = p["w_gate"].shape[1]
+    mask = sparse_mask.csr_to_dense(idx, counts, f // block)   # (B, G)
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = jax.nn.silu(g) * u
+    h = masks.apply_expanded(h, masks.freeze(mask[:, None, :]), block)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+def swiglu_csr_gather(p: dict, x: jax.Array, idx: jax.Array,
+                      counts: jax.Array, *, block: int) -> jax.Array:
+    """XLA fallback: contract only the leading K = active-group bound
+    blocks per lane (the paged-attention bounded-gather trick — K is a
+    static pow2 bucket, so FLOPs scale with the bound, not F).  Per-lane
+    patterns force a per-lane weight-block gather (B, K, d, block); the
+    CSR Pallas kernel avoids materializing it — this path is the
+    non-Mosaic fallback.  Padded slots (>= counts) are zeroed before the
+    down-projection, so the result matches swiglu_csr_masked."""
+    d, f = p["w_gate"].shape
+    b = idx.shape[0]
+    k = idx.shape[-1]
+    # flat column gather: expand the group list to neuron columns and
+    # take along the weights' LAST axis (rows for w_down).  Copy volume
+    # is B * K * block columns — it scales with the bound, unlike a
+    # transpose-first group gather, whose (d, G, block) -> (G, d, block)
+    # shuffle re-copies the FULL weight every decode step.  (Middle-axis
+    # takes are still the A5 trap — XLA turns them into one-hot dots.)
+    cols = (idx[..., None] * block
+            + jnp.arange(block)).reshape(b, k * block)         # (B, KB)
+    wg = jnp.take(p["w_gate"], cols, axis=1)                   # (d, B, KB)
+    wu = jnp.take(p["w_up"], cols, axis=1)
+    wd = jnp.take(p["w_down"], cols, axis=0)                   # (B, KB, d)
+    g = jnp.einsum("bsd,dbm->bsm", x, wg)
+    u = jnp.einsum("bsd,dbm->bsm", x, wu)
+    h = jax.nn.silu(g) * u                                     # (B, S, KB)
+    valid = (jnp.arange(k) < counts[:, None]).astype(h.dtype)  # (B, K)
+    h = h * jnp.repeat(valid, block, axis=-1)[:, None, :]
+    return jnp.einsum("bsm,bmd->bsd", h, wd)
+
+
+def swiglu_csr(p: dict, x: jax.Array, idx: jax.Array, counts: jax.Array,
+               *, block: int, apply: str = "auto") -> jax.Array:
+    """Group-CSR SwiGLU dispatch (models/transformer._ffn_apply serving
+    path).  `apply`: "dense" masked-dense reference, "xla" bounded
+    gather, "kernel" Pallas index-list walk (kernels/dsg_ffn.dsg_ffn_csr,
+    decode only: S == 1), "auto" = kernel where Mosaic compiles it."""
+    b, s, d = x.shape
+    if apply == "auto":
+        apply = ("kernel" if jax.default_backend() == "tpu" and s == 1
+                 else "xla")
+    if apply == "dense":
+        return swiglu_csr_masked(p, x, idx, counts, block=block)
+    if apply == "xla":
+        return swiglu_csr_gather(p, x, idx, counts, block=block)
+    if apply != "kernel":
+        raise ValueError(f"unknown CSR FFN apply mode {apply!r}")
+    if s != 1:
+        raise ValueError(
+            f"CSR FFN kernel is a decode step (one token per lane), got "
+            f"S={s}; use apply='xla' for multi-token rows")
+    from repro.kernels import ops
+    y = ops.dsg_ffn_csr(x[:, 0], p["w_gate"], p["w_up"], p["w_down"],
+                        idx, counts, block=block)
+    return y[:, None, :]
+
+
 def swiglu_ffn(p: dict, x: jax.Array, state: Optional[dict],
                cfg: DSGConfig) -> jax.Array:
     if not cfg.enabled or state is None:

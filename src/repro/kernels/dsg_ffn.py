@@ -26,6 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(x_ref, wg_ref, wu_ref, wd_ref, tmask_ref, tokmask_ref, o_ref,
@@ -87,3 +88,79 @@ def dsg_ffn(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
         out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
         interpret=interpret,
     )(x, wg, wu, wd, tile_mask, token_mask.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# CSR-driven decode variant
+# ---------------------------------------------------------------------------
+
+def _csr_kernel(idx_ref, cnt_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    """One (lane, csr-slot) cell: the index maps below already steered the
+    gate/up/down weight *blocks* of group idx[b, j] into VMEM, so the body
+    is a dense (1, d) x (d, blk) SwiGLU + down-projection, skipped for
+    padded slots past the lane's count."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(j < cnt_ref[b])
+    def _compute():
+        x = x_ref[...]                                    # (1, d)
+        g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+        u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+        h = jax.nn.silu(g) * u                            # (1, blk)
+        o_ref[...] += jnp.dot(h.astype(x.dtype), wd_ref[...],
+                              preferred_element_type=jnp.float32
+                              ).astype(o_ref.dtype)
+
+
+def dsg_ffn_csr(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
+                idx: jax.Array, counts: jax.Array, *, block: int = 128,
+                interpret: bool = False) -> jax.Array:
+    """Group-CSR SwiGLU decode: walk each lane's active-group index list
+    instead of scanning a dense tile mask.
+
+    x (B, d) one token per lane, wg/wu (d, F), wd (F, d),
+    idx (B, K) active group indices (core/sparse_mask.py layout: ascending
+    per lane, zero-padded past counts), counts (B,) -> (B, d).
+
+    Grid (B, K), K innermost so the (1, d) output row accumulates in VMEM
+    across the walk.  The index list is scalar-prefetched (the
+    paged-attention page-table idiom): the weight-block index maps read
+    `idx[b, j]` directly, so ONLY the kept groups' gate/up/down blocks
+    ever leave HBM — weight traffic scales with counts, not F.  Padded
+    slots clamp to the last active block (the consecutive-identical-index
+    elision skips the re-fetch) and `pl.when` skips their compute."""
+    b, d = x.shape
+    f = wg.shape[1]
+    k = idx.shape[1]
+    assert f % block == 0 and k <= f // block
+
+    def _wcol(bb, jj, idx_p, cnt_p):
+        # clamp padded slots onto the lane's last active block: identical
+        # consecutive indices -> the pipeline elides the HBM fetch
+        return idx_p[bb, jnp.minimum(jj, jnp.maximum(cnt_p[bb], 1) - 1)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,      # idx, counts
+        grid=(b, k),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda bb, jj, idx_p, cnt_p: (bb, 0)),
+            pl.BlockSpec((d, block),
+                         lambda bb, jj, idx_p, cnt_p: (0, _wcol(bb, jj, idx_p, cnt_p))),
+            pl.BlockSpec((d, block),
+                         lambda bb, jj, idx_p, cnt_p: (0, _wcol(bb, jj, idx_p, cnt_p))),
+            pl.BlockSpec((block, d),
+                         lambda bb, jj, idx_p, cnt_p: (_wcol(bb, jj, idx_p, cnt_p), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda bb, jj, idx_p, cnt_p: (bb, 0)),
+    )
+    return pl.pallas_call(
+        _csr_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), x.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), counts.astype(jnp.int32), x, wg, wu, wd)

@@ -51,6 +51,16 @@ def dsg_ffn_fwd(x, wg, wu, wd, token_mask, block: int = 128,
                            bm=bm, bf=bf, interpret=_interpret())
 
 
+@partial(jax.jit, static_argnames=("block",))
+def dsg_ffn_csr(x, wg, wu, wd, idx, counts, block: int = 128):
+    """Group-CSR SwiGLU decode step (kernels/dsg_ffn.dsg_ffn_csr): walk
+    each lane's active-group index list — x (B, d), idx (B, K),
+    counts (B,) -> (B, d).  K is the static active-group bound
+    (core/sparse_mask.active_group_bound)."""
+    return dsg_ffn.dsg_ffn_csr(x, wg, wu, wd, idx, counts, block=block,
+                               interpret=_interpret())
+
+
 def dsg_ffn_full(x, wg, wu, wd, r, fw, gamma: float, block: int = 128):
     """End-to-end DSG FFN through the kernels: project -> scores ->
     shared-threshold mask -> block-skip FFN.  Mirrors the pure-JAX

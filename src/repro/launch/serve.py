@@ -82,6 +82,30 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--no-dsg", action="store_true")
+    ap.add_argument("--gamma", type=float, default=None,
+                    help="DSG sparsity: fraction of neuron groups dropped "
+                         "(DSGConfig.gamma, in [0, 1); default: the "
+                         "arch config's value)")
+    ap.add_argument("--dsg-threshold-mode",
+                    choices=("topk", "shared", "ema"), default=None,
+                    help="DRS threshold mode (DSGConfig.threshold_mode): "
+                         "per-row topk, the paper's inter-sample shared "
+                         "threshold, or a cross-step EMA")
+    ap.add_argument("--dsg-serving", action="store_true",
+                    help="mixed workload: serving-side DSG sparsity "
+                         "runtime (serving/dsg_runtime.py) — per-lane "
+                         "group-CSR patterns drive a sparse FFN decode, "
+                         "refreshed every --dsg-refresh-interval tokens")
+    ap.add_argument("--dsg-refresh-interval", type=int, default=8,
+                    help="emitted tokens between DRS pattern refreshes "
+                         "per lane (--dsg-serving)")
+    ap.add_argument("--dsg-apply",
+                    choices=("auto", "dense", "xla", "kernel"),
+                    default="auto",
+                    help="group-CSR FFN executor for --dsg-serving "
+                         "(ModelConfig.dsg_ffn_apply): masked-dense "
+                         "reference, bounded XLA gather, Pallas CSR "
+                         "kernel, or auto (kernel on TPU)")
     # mixed-workload knobs
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
@@ -128,13 +152,30 @@ def main():
            else configs.get_config(args.arch))
     if args.no_dsg:
         cfg = cfg.replace(dsg=cfg.dsg._replace(enabled=False))
-    cfg = cfg.replace(paged_attn_kernel=args.paged_kernel)
+    if args.gamma is not None:
+        if not 0.0 <= args.gamma < 1.0:
+            ap.error(f"--gamma must be in [0, 1), got {args.gamma}")
+        cfg = cfg.replace(dsg=cfg.dsg._replace(gamma=args.gamma))
+    if args.dsg_threshold_mode is not None:
+        cfg = cfg.replace(dsg=cfg.dsg._replace(
+            threshold_mode=args.dsg_threshold_mode))
+    if args.dsg_serving and args.no_dsg:
+        ap.error("--dsg-serving needs DSG enabled (drop --no-dsg)")
+    if args.dsg_serving and args.workload != "mixed":
+        ap.error("--dsg-serving is a mixed-workload (serving engine) "
+                 "feature; add --workload mixed")
+    cfg = cfg.replace(paged_attn_kernel=args.paged_kernel,
+                      dsg_ffn_apply=args.dsg_apply)
     key = jax.random.PRNGKey(0)
     params = api.init_model(key, cfg)
     dsg = api.init_dsg(jax.random.fold_in(key, 1), params, cfg)
 
     if args.workload == "mixed":
+        from repro.serving.dsg_runtime import DSGServingConfig
         from repro.serving.workload import mixed_requests, run_workload
+        dsg_serving = (DSGServingConfig(
+            refresh_interval=args.dsg_refresh_interval)
+            if args.dsg_serving else None)
         reqs = mixed_requests(cfg.vocab, args.requests, seed=args.seed,
                               temperature=args.temperature,
                               top_p=args.top_p)
@@ -148,6 +189,7 @@ def main():
                              replicas=args.replicas,
                              route_policy=args.route_policy,
                              exec_mode=args.exec_mode,
+                             dsg_serving=dsg_serving,
                              seed=args.seed)
         tag = f"{stats['admission']}/{stats['cache_backend']}"
         if "route_policy" in stats:

@@ -117,8 +117,23 @@ def _layer_dsg(dsg: Optional[dict], cfg: ModelConfig):
 
 
 def _ffn_apply(p: dict, dsg_l: Optional[dict], r: Optional[jax.Array],
-               x: jax.Array, cfg: ModelConfig, mesh, batch_axes):
-    """FFN or MoE with DSG; returns (y, aux)."""
+               x: jax.Array, cfg: ModelConfig, mesh, batch_axes,
+               csr_l: Optional[dict] = None):
+    """FFN or MoE with DSG; returns (y, aux).
+
+    csr_l: this layer's group-CSR selection {'idx': (B, K),
+    'counts': (B,)} from the serving DSG runtime — when present the FFN
+    contracts only the listed groups (core/dsg_linear.swiglu_csr: masked
+    dense reference, bounded XLA gather, or the CSR Pallas kernel per
+    cfg.dsg_ffn_apply) instead of running DRS online per token."""
+    if csr_l is not None:
+        if cfg.is_moe:
+            raise NotImplementedError(
+                "group-CSR serving selection targets the dense-FFN "
+                "family; MoE experts are already conditional compute")
+        y = dl.swiglu_csr(p["ffn"], x, csr_l["idx"], csr_l["counts"],
+                          block=cfg.dsg.block, apply=cfg.dsg_ffn_apply)
+        return y, jnp.float32(0.0)
     if cfg.is_moe:
         dsg_state = None
         if dsg_l is not None:
@@ -134,8 +149,29 @@ def _ffn_apply(p: dict, dsg_l: Optional[dict], r: Optional[jax.Array],
     return dl.swiglu_ffn(p["ffn"], x, st, cfg.dsg), jnp.float32(0.0)
 
 
+def _drs_scores(h: jax.Array, r: jax.Array, fw: jax.Array,
+                cfg: ModelConfig) -> jax.Array:
+    """DRS group scores of the FFN input h (B, S, d) -> (B, S, G), on
+    device through the Pallas search kernels (kernels/drs_search.py):
+    f(h) = h @ R^T, then fused virtual-matmul + relu-sum group reduce.
+    The serving DSG runtime reads these back once per refresh window to
+    rewrite its CSR patterns (host bookkeeping lags the kernel, like the
+    paged page-table mirror)."""
+    from repro.kernels import ops as kernel_ops
+    b, s, d = h.shape
+    m = b * s
+    bm = m if m % 128 else 128          # kernels assert m % bm == 0
+    f = fw.shape[-1]
+    bf = f if f % 512 else 512
+    fx = kernel_ops.drs_project(h.reshape(m, d).astype(r.dtype), r, bm=bm)
+    scores = kernel_ops.drs_scores(fx, fw, block=cfg.dsg.block, bm=bm,
+                                   bf=bf)
+    return scores.reshape(b, s, f // cfg.dsg.block)
+
+
 def _block(p: dict, dsg_l, r, x, cfg: ModelConfig, q_pos, cache, cache_pos,
-           page_table, live_pages, mesh, batch_axes):
+           page_table, live_pages, mesh, batch_axes, csr_l=None,
+           collect_scores: bool = False):
     from repro.parallel import context as pctx
 
     def boundary(t):
@@ -163,11 +199,14 @@ def _block(p: dict, dsg_l, r, x, cfg: ModelConfig, q_pos, cache, cache_pos,
         bf16_scores=cfg.attn_bf16_scores)
     x = x + boundary(a)
     h = norm_apply(cfg.norm, p["ln_ffn"], x)
-    f, aux = _ffn_apply(p, dsg_l, r, h, cfg, mesh, batch_axes)
+    scores = None
+    if collect_scores:
+        scores = _drs_scores(h, r, dsg_l["fw"], cfg)
+    f, aux = _ffn_apply(p, dsg_l, r, h, cfg, mesh, batch_axes, csr_l)
     x = x + boundary(f)
     if cfg.seq_sharded_residual:
         x = pctx.constrain(x, pctx.batch_axes(), "model", None)
-    return x, new_cache, aux
+    return x, new_cache, aux, scores
 
 
 def forward(params: dict, dsg: Optional[dict], cfg: ModelConfig,
@@ -175,8 +214,17 @@ def forward(params: dict, dsg: Optional[dict], cfg: ModelConfig,
             cache: Optional[dict] = None, pos0=0,
             live_pages: Optional[int] = None,
             mesh: Optional[Mesh] = None, batch_axes=None,
-            last_only: bool = False):
-    """tokens (B, S) -> (logits, new_cache, aux_loss).
+            last_only: bool = False, ffn_csr: Optional[dict] = None,
+            collect_drs_scores: bool = False):
+    """tokens (B, S) -> (logits, new_cache, aux_loss)
+    [+ drs_scores (L, B, S, G) when collect_drs_scores].
+
+    ffn_csr: serving DSG selection stacks {'idx': (L, B, K),
+    'counts': (L, B)} — per-layer group-CSR patterns scanned alongside
+    the layer params; the FFN contracts only the listed groups.
+    collect_drs_scores (python-static): additionally return each layer's
+    DRS group scores of the FFN input — the serving runtime's refresh
+    reads them to rewrite patterns off the measured decode window.
 
     prefix_embeds (B, P, d): VLM stub patch embeddings, prepended.
     cache: stacked per-layer KV {'k': (L,B,Smax,Kv,D), 'v': ...} for decode,
@@ -208,17 +256,23 @@ def forward(params: dict, dsg: Optional[dict], cfg: ModelConfig,
     dsg_stack = _layer_dsg(dsg, cfg)
 
     def body(xc, scanned):
-        p_l, dsg_l, cache_l = scanned
-        y, new_cache, aux = _block(p_l, dsg_l, r, xc, cfg, q_pos, cache_l,
-                                   pos0, page_table, live_pages, mesh,
-                                   batch_axes)
-        return y, (new_cache, aux)
+        p_l, dsg_l, cache_l, csr_l = scanned
+        y, new_cache, aux, scores = _block(
+            p_l, dsg_l, r, xc, cfg, q_pos, cache_l, pos0, page_table,
+            live_pages, mesh, batch_axes, csr_l, collect_drs_scores)
+        ys = ((new_cache, aux, scores) if collect_drs_scores
+              else (new_cache, aux))
+        return y, ys
 
     if cfg.remat and cache is None:
         body = jax.checkpoint(body)
 
-    x, (new_cache, aux) = jax.lax.scan(
-        body, x, (params["layers"], dsg_stack, cache))
+    x, ys = jax.lax.scan(
+        body, x, (params["layers"], dsg_stack, cache, ffn_csr))
+    if collect_drs_scores:
+        new_cache, aux, drs_scores = ys
+    else:
+        (new_cache, aux), drs_scores = ys, None
     if page_table is not None:
         new_cache = {"pages_k": new_cache["k"], "pages_v": new_cache["v"],
                      "page_table": page_table}
@@ -228,6 +282,8 @@ def forward(params: dict, dsg: Optional[dict], cfg: ModelConfig,
     head = (params["embed"].T if cfg.tie_embeddings
             else params["lm_head"]).astype(_dtype(cfg))
     logits = jnp.einsum("bsd,dv->bsv", x, head)
+    if collect_drs_scores:
+        return logits, new_cache, jnp.sum(aux), drs_scores
     return logits, new_cache, jnp.sum(aux)
 
 
@@ -272,21 +328,33 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
 
 
 def prefill(params, dsg, cfg: ModelConfig, tokens, cache,
-            prefix_embeds=None, mesh=None, batch_axes=None):
-    """Prefill the cache with the prompt; returns (last_logits, cache)."""
-    logits, new_kv, _ = forward(params, dsg, cfg, tokens,
-                                prefix_embeds=prefix_embeds, cache=cache,
-                                pos0=0, mesh=mesh, batch_axes=batch_axes,
-                                last_only=True)
+            prefix_embeds=None, mesh=None, batch_axes=None,
+            collect_drs_scores: bool = False):
+    """Prefill the cache with the prompt; returns (last_logits, cache)
+    [+ last-token DRS scores (L, B, G) when collect_drs_scores — what the
+    serving runtime seeds a lane's CSR pattern from at admission]."""
+    out = forward(params, dsg, cfg, tokens, prefix_embeds=prefix_embeds,
+                  cache=cache, pos0=0, mesh=mesh, batch_axes=batch_axes,
+                  last_only=True, collect_drs_scores=collect_drs_scores)
+    if collect_drs_scores:
+        logits, new_kv, _, scores = out
+        return logits[:, -1], new_kv, scores[:, :, -1]
+    logits, new_kv, _ = out
     return logits[:, -1], new_kv
 
 
 def decode_step(params, dsg, cfg: ModelConfig, token, cache, pos,
-                live_pages=None, mesh=None, batch_axes=None):
+                live_pages=None, mesh=None, batch_axes=None,
+                ffn_csr=None, collect_drs_scores: bool = False):
     """One decode step.  token (B, 1), pos scalar or per-lane (B,) vector
-    -> (logits (B, V), cache).  live_pages: static paged-walk bound
-    (see forward)."""
-    logits, new_cache, _ = forward(params, dsg, cfg, token, cache=cache,
-                                   pos0=pos, live_pages=live_pages,
-                                   mesh=mesh, batch_axes=batch_axes)
+    -> (logits (B, V), cache) [+ DRS scores (L, B, G) when
+    collect_drs_scores].  live_pages: static paged-walk bound; ffn_csr:
+    per-layer group-CSR selection stacks (see forward)."""
+    out = forward(params, dsg, cfg, token, cache=cache, pos0=pos,
+                  live_pages=live_pages, mesh=mesh, batch_axes=batch_axes,
+                  ffn_csr=ffn_csr, collect_drs_scores=collect_drs_scores)
+    if collect_drs_scores:
+        logits, new_cache, _, scores = out
+        return logits[:, -1], new_cache, scores[:, :, 0]
+    logits, new_cache, _ = out
     return logits[:, -1], new_cache

@@ -460,6 +460,13 @@ class ShardedExecutor(ReplicaExecutor):
 
     def __init__(self, engines, mesh=None):
         super().__init__(engines)
+        if any(getattr(e, "dsg_rt", None) is not None for e in engines):
+            raise NotImplementedError(
+                "sharded executor batches the plain decode step "
+                "(scheduler.make_decode_fns); DSG-serving engines "
+                "dispatch the CSR/refresh variants inside "
+                "ServingEngine.step() — use exec_mode 'sequential' or "
+                "'threaded' with dsg_serving")
         self.mesh = mesh
         self._sharding = None
         if mesh is not None:

@@ -48,7 +48,7 @@ import numpy as np
 
 from repro.analysis.contracts import exempt, owned_by, runs_on
 from repro.models import api
-from repro.serving import kv_cache
+from repro.serving import dsg_runtime, kv_cache
 from repro.serving.kv_cache import CacheHandle
 
 DEFAULT_BUCKETS = (16, 32, 64, 96, 128, 192, 256)
@@ -135,6 +135,14 @@ class StepPlan:
     sample: bool                      # any lane with temperature > 0
 
 
+def _restore_table(data, c):
+    # the host mirror is the source of truth for the page table;
+    # the lane-mirrored view must not escape the step
+    if c.kind != "paged":
+        return data
+    return {**data, "page_table": c.data["page_table"]}
+
+
 def make_decode_fns(cfg):
     """Build the (greedy, sample) decode-step callables the engine jits.
 
@@ -143,13 +151,6 @@ def make_decode_fns(cfg):
     leading replica axis — one definition, two compilation strategies,
     no drift between the per-engine and batched paths.
     """
-    def _restore_table(data, c):
-        # the host mirror is the source of truth for the page table;
-        # the lane-mirrored view must not escape the step
-        if c.kind != "paged":
-            return data
-        return {**data, "page_table": c.data["page_table"]}
-
     def _decode_greedy(p, d, tok, c, pos, free_mask, donor, live_pages):
         view = kv_cache.decode_view(c, free_mask, donor)
         logits, data = api.decode_step(p, d, cfg, tok, view, pos,
@@ -170,6 +171,54 @@ def make_decode_fns(cfg):
                                 c.page_size)
 
     return _decode_greedy, _decode_sample
+
+
+def make_dsg_decode_fns(cfg):
+    """DSG-serving decode-step variants (engines with a DSGRuntime):
+    the make_decode_fns bodies plus (a) the group-CSR selection operand
+    `csr` = {'idx': (L, B, K), 'counts': (L, B)} — free lanes mirror the
+    donor's rows in-jit (dsg_runtime.mirror_csr) so paged duplicate K/V
+    writes stay bit-identical — and (b) a python-static `refresh` flag
+    that additionally returns each layer's DRS group scores of this
+    step's FFN inputs (None otherwise); the runtime rewrites due lanes'
+    patterns from them AFTER the step, off the measured decode window.
+    K is static (pow2 active-group bound), so the decode compiles
+    (bounds x refresh) variants, all pre-compiled by warm_decode."""
+    from repro.serving.dsg_runtime import mirror_csr
+
+    def _dsg_greedy(p, d, tok, c, pos, free_mask, donor, live_pages, csr,
+                    refresh):
+        view = kv_cache.decode_view(c, free_mask, donor)
+        csr_m = mirror_csr(csr, free_mask, donor)
+        out = api.decode_step(p, d, cfg, tok, view, pos,
+                              live_pages=live_pages, ffn_csr=csr_m,
+                              collect_drs_scores=refresh)
+        if refresh:
+            logits, data, scores = out
+        else:
+            (logits, data), scores = out, None
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, CacheHandle(_restore_table(data, c), c.kind,
+                                 c.page_size), scores)
+
+    def _dsg_sample(p, d, tok, c, pos, free_mask, donor, live_pages, csr,
+                    key, step, temps, top_ps, refresh):
+        view = kv_cache.decode_view(c, free_mask, donor)
+        csr_m = mirror_csr(csr, free_mask, donor)
+        out = api.decode_step(p, d, cfg, tok, view, pos,
+                              live_pages=live_pages, ffn_csr=csr_m,
+                              collect_drs_scores=refresh)
+        if refresh:
+            logits, data, scores = out
+        else:
+            (logits, data), scores = out, None
+        keys = jax.random.split(jax.random.fold_in(key, step),
+                                tok.shape[0])
+        nxt = sample_tokens(logits, keys, temps, top_ps)
+        return (nxt, CacheHandle(_restore_table(data, c), c.kind,
+                                 c.page_size), scores)
+
+    return _dsg_greedy, _dsg_sample
 
 
 def sample_tokens(logits: jax.Array, keys: jax.Array, temps: jax.Array,
@@ -223,7 +272,7 @@ class ServingEngine:
                  admission: str = "overlap",
                  cache_backend: Union[str, object] = "dense",
                  page_size: int = 16, cache_tokens: Optional[int] = None,
-                 seed: int = 0):
+                 seed: int = 0, dsg_serving=None):
         if admission not in ("overlap", "wave"):
             raise ValueError(f"unknown admission policy {admission!r}")
         self.cfg = cfg
@@ -292,6 +341,42 @@ class ServingEngine:
         self._jit_decode_sample = jax.jit(_decode_sample,
                                           donate_argnums=(3,),
                                           static_argnums=(7,))
+
+        # DSG serving runtime (serving/dsg_runtime.py): per-lane group-CSR
+        # patterns feed a sparse FFN decode; refresh scores ride back out
+        # of the refresh-variant decode step
+        scfg = dsg_runtime.as_serving_config(dsg_serving)
+        self.dsg_rt = None
+        if scfg is not None:
+            if dsg is None or not cfg.dsg.enabled:
+                raise ValueError(
+                    "dsg_serving needs DSG state: cfg.dsg.enabled and a "
+                    "non-None dsg pytree")
+            if cfg.is_moe or cfg.act != "swiglu":
+                raise ValueError(
+                    "dsg_serving targets the dense SwiGLU FFN family "
+                    f"(got act={cfg.act!r}, moe_experts={cfg.moe_experts})")
+            if cfg.dsg.score != "relu_sum":
+                raise ValueError(
+                    "the on-device refresh (kernels/drs_search.drs_scores) "
+                    f"computes relu_sum scores; cfg.dsg.score is "
+                    f"{cfg.dsg.score!r}")
+            self.dsg_rt = dsg_runtime.DSGRuntime(cfg, scfg, n_slots)
+
+            def _prefill_dsg(p, d, toks, lane0):
+                logits, lane, scores = api.prefill(
+                    p, d, cfg, {"tokens": toks}, lane0,
+                    collect_drs_scores=True)
+                return logits[0], lane, scores
+
+            _dsg_greedy, _dsg_sample = make_dsg_decode_fns(cfg)
+            self._jit_prefill_dsg = jax.jit(_prefill_dsg)
+            self._jit_decode_greedy_dsg = jax.jit(_dsg_greedy,
+                                                  donate_argnums=(3,),
+                                                  static_argnums=(7, 9))
+            self._jit_decode_sample_dsg = jax.jit(_dsg_sample,
+                                                  donate_argnums=(3,),
+                                                  static_argnums=(7, 13))
 
     # -- public API ---------------------------------------------------------
 
@@ -400,8 +485,17 @@ class ServingEngine:
             toks = np.zeros((1, pb), np.int32)
             pr = req.prompt[-pb:]
             toks[0, pb - len(pr):] = pr
-            logits, lane = self._jit_prefill(self.params, self.dsg,
-                                             jnp.asarray(toks), self._lane0)
+            if self.dsg_rt is not None:
+                logits, lane, sc = self._jit_prefill_dsg(
+                    self.params, self.dsg, jnp.asarray(toks), self._lane0)
+                # seed the lane's CSR pattern from the prompt's last-token
+                # DRS scores: the lane decodes sparsely from step one (a
+                # dense warm-in would dilute the modeled FLOP reduction)
+                self.dsg_rt.set_lane_from_scores(i, np.asarray(sc)[:, 0])
+            else:
+                logits, lane = self._jit_prefill(self.params, self.dsg,
+                                                 jnp.asarray(toks),
+                                                 self._lane0)
             self.cache = self.backend.write(self.cache, lane, i,
                                             n_tokens=pb, reserve_tokens=need)
             # _draws advances for every admission so the sampling key
@@ -449,6 +543,21 @@ class ServingEngine:
         temps = np.full(self.n_slots, 0.5, np.float32)
         top_ps = np.ones(self.n_slots, np.float32)
         for live in buckets:
+            if self.dsg_rt is not None:
+                # (bound x refresh) variants of the DSG decode step; the
+                # plain decode fns are never dispatched by a DSG engine
+                for bnd in self.dsg_rt.warm_bounds():
+                    csr = self.dsg_rt.device_csr(bnd)
+                    for refresh in (False, True):
+                        _, self.cache, _ = self._jit_decode_greedy_dsg(
+                            self.params, self.dsg, tok, self.cache, pos,
+                            free_mask, 0, live, csr, refresh)
+                        if sample:
+                            _, self.cache, _ = self._jit_decode_sample_dsg(
+                                self.params, self.dsg, tok, self.cache,
+                                pos, free_mask, 0, live, csr,
+                                self._base_key, 0, temps, top_ps, refresh)
+                continue
             _, self.cache = self._jit_decode_greedy(
                 self.params, self.dsg, tok, self.cache, pos, free_mask, 0,
                 live)
@@ -536,6 +645,34 @@ class ServingEngine:
                 self.cache = self.backend.free(self.cache, i)
 
     @runs_on("worker")
+    def _dispatch_dsg(self, plan: StepPlan):
+        """DSG-serving decode dispatch: per-lane refresh cadence (a lane
+        is due when its emitted-token count crosses refresh_interval —
+        depending only on the lane's own history, so streams stay
+        invariant to co-scheduling and replica count), CSR operands at
+        the current pow2 bound, and the FLOP-model log entry."""
+        rt = self.dsg_rt
+        due = [i for i in plan.active
+               if len(self.slots[i].req.output)
+               % rt.cfg.refresh_interval == 0]
+        refresh = bool(due)
+        bound = rt.bound()
+        csr = rt.device_csr(bound)
+        rt.record_step(plan.active, bound)
+        if plan.sample:
+            next_tok, self.cache, scores = self._jit_decode_sample_dsg(
+                self.params, self.dsg, jnp.asarray(plan.tok)[:, None],
+                self.cache, jnp.asarray(plan.pos), plan.free_mask,
+                plan.donor, plan.live_pages, csr, self._base_key,
+                self.steps, plan.temps, plan.top_ps, refresh)
+        else:
+            next_tok, self.cache, scores = self._jit_decode_greedy_dsg(
+                self.params, self.dsg, jnp.asarray(plan.tok)[:, None],
+                self.cache, jnp.asarray(plan.pos), plan.free_mask,
+                plan.donor, plan.live_pages, csr, refresh)
+        return next_tok, scores, due
+
+    @runs_on("worker")
     def step(self):
         """One full engine step: begin (host) -> jitted decode (device)
         -> commit (host).  Replica executors that batch the device half
@@ -544,9 +681,12 @@ class ServingEngine:
         if plan is None:
             return
         t0 = time.perf_counter()
+        scores = due = None
         # PRNG keys depend only on (engine seed, step, lane), so mixing
         # greedy-only and sampling steps never shifts the key schedule
-        if plan.sample:
+        if self.dsg_rt is not None:
+            next_tok, scores, due = self._dispatch_dsg(plan)
+        elif plan.sample:
             next_tok, self.cache = self._jit_decode_sample(
                 self.params, self.dsg, jnp.asarray(plan.tok)[:, None],
                 self.cache, jnp.asarray(plan.pos), plan.free_mask,
@@ -559,6 +699,15 @@ class ServingEngine:
                 plan.donor, plan.live_pages)
         next_host = np.array(next_tok, np.int32)       # syncs the device
         self.commit_step(plan, next_host, time.perf_counter() - t0)
+        if self.dsg_rt is not None:
+            # host pattern bookkeeping lags the device step (the paged
+            # page-table split): retire first, then rewrite due lanes
+            # from the refresh scores (update skips inactive lanes)
+            for i in plan.active:
+                if self.slots[i].req is None:          # retired in commit
+                    self.dsg_rt.reset_lane(i)
+            if scores is not None:
+                self.dsg_rt.update_from_scores(np.asarray(scores), due)
 
     # -- stats ---------------------------------------------------------------
 

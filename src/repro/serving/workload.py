@@ -123,7 +123,7 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
                  cache_backend: str = "dense", page_size: int = 16,
                  cache_tokens=None, seed: int = 0, replicas: int = 1,
                  route_policy: str = "least_queue",
-                 exec_mode: str = "sequential",
+                 exec_mode: str = "sequential", dsg_serving=None,
                  max_steps: int = 100_000) -> Dict[str, float]:
     """Run the request list through one engine (replicas=1, the historical
     path) or a Router over `replicas` engines; returns throughput/latency
@@ -133,7 +133,10 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
     `exec_mode` picks the replica executor (serving/parallel_exec.py):
     "sequential" steps replicas in-process, "threaded" free-runs one
     worker thread per replica, "sharded" fuses the group into one
-    vmapped device step.  Router runs add `makespan_s` — MODELED
+    vmapped device step.  `dsg_serving` (None | True | DSGServingConfig)
+    turns on the serving-side DSG sparsity runtime per engine
+    (serving/dsg_runtime.py; every replica owns its own pattern state).
+    Router runs add `makespan_s` — MODELED
     data-parallel wall clock (slowest replica's busy time) under the
     sequential executor, MEASURED wall clock under the parallel ones
     (`makespan_measured` records which) — and `parallel_tok_per_s`
@@ -141,7 +144,7 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
     engine_kw = dict(n_slots=n_slots, max_seq=max_seq,
                      prompt_bucket=prompt_bucket, admission=admission,
                      cache_backend=cache_backend, page_size=page_size,
-                     cache_tokens=cache_tokens)
+                     cache_tokens=cache_tokens, dsg_serving=dsg_serving)
     warm_temp = max((r.temperature for r in requests), default=0.0)
     if replicas == 1 and exec_mode == "sequential":
         eng = ServingEngine(cfg, params, dsg, seed=seed, **engine_kw)

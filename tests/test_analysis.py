@@ -237,6 +237,40 @@ def test_host_numpy_index_map_flagged(tmp_path):
     assert codes(lint_snippet(tmp_path, src)) == ["PAL303"]
 
 
+BAD_INTERPRET_LITERAL = """\
+from jax.experimental import pallas as pl
+
+def run(x, kernel):
+    return pl.pallas_call(kernel, out_shape=x, interpret=True)(x)
+"""
+
+GOOD_INTERPRET_THREADED = """\
+from jax.experimental import pallas as pl
+
+def run(x, kernel, interpret=False):
+    return pl.pallas_call(kernel, out_shape=x, interpret=interpret)(x)
+"""
+
+
+def test_interpret_literal_outside_kernels_flagged(tmp_path):
+    assert codes(lint_snippet(tmp_path, BAD_INTERPRET_LITERAL)) \
+        == ["PAL304"]
+
+
+def test_interpret_literal_allowed_in_kernels(tmp_path):
+    # kernel modules DEFAULT the kwarg (interpret: bool = False) and the
+    # ops.py wrappers thread the policy — a literal there is the
+    # documented layering, not a fork
+    root = tmp_path / "src" / "repro" / "kernels"
+    root.mkdir(parents=True)
+    (root / "mod.py").write_text(BAD_INTERPRET_LITERAL)
+    assert run_lint(tmp_path / "src") == []
+
+
+def test_interpret_threaded_variable_is_clean(tmp_path):
+    assert lint_snippet(tmp_path, GOOD_INTERPRET_THREADED) == []
+
+
 def test_clamped_index_map_is_clean(tmp_path):
     # jnp clamps inside index maps are the paged-attention idiom: index
     # maps are traced, so jnp is legal there (and np is legal in grids)

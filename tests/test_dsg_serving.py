@@ -1,0 +1,412 @@
+"""Serving-side DSG sparsity runtime (PR 7).
+
+Layers under test, bottom up:
+
+  * core/sparse_mask.py — group-CSR representation: dense<->CSR round
+    trips, pow2 bounds, overhead accounting.
+  * core/dsg_linear.swiglu_csr — the three FFN executors (masked-dense
+    reference, bounded XLA gather, Pallas CSR kernel) agree numerically;
+    full-density CSR matches the plain dense FFN.
+  * serving/dsg_runtime.py — host pattern state: admission seeding,
+    per-lane thresholds, retirement, bounds, device-push caching,
+    donor mirroring, the double-mask hook.
+  * ServingEngine + Router differentials (tests/harness.py): identical
+    greedy streams across FFN executors, cache backends, slot counts,
+    and replica counts — and the modeled FLOP reduction of the measured
+    window.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from harness import (assert_streams_equal, engine_spec, make_engine_parts,
+                     mixed_traffic, run_and_collect)
+from repro.core import double_mask as dm
+from repro.core import dsg_linear as dl
+from repro.core import sparse_mask
+from repro.serving import dsg_runtime
+from repro.serving.dsg_runtime import DSGRuntime, DSGServingConfig
+from repro.serving.router import Router
+from repro.serving.scheduler import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engine_parts():
+    return make_engine_parts()     # threshold_mode="topk": lanes independent
+
+
+# ---------------------------------------------------------------------------
+# sparse_mask: group-CSR representation
+# ---------------------------------------------------------------------------
+
+def test_active_group_bound_pow2_capped():
+    assert [sparse_mask.active_group_bound(c, 8) for c in
+            (0, 1, 2, 3, 4, 5, 8, 9)] == [1, 1, 2, 4, 4, 8, 8, 8]
+    assert sparse_mask.active_group_buckets(8) == (1, 2, 4, 8)
+    assert sparse_mask.active_group_buckets(4) == (1, 2, 4)
+
+
+def test_dense_csr_round_trip_and_canonical_padding():
+    rng = np.random.default_rng(7)
+    g = 8
+    mask = (rng.random((3, 5, g)) < 0.4).astype(np.float32)
+    mask[0, 0] = 0.0
+    mask[0, 0, 3] = 1.0                      # single-group row
+    bound = sparse_mask.active_group_bound(int(mask.sum(-1).max()), g)
+    idx, counts = sparse_mask.dense_to_csr(jnp.asarray(mask), bound)
+    idx, counts = np.asarray(idx), np.asarray(counts)
+    assert np.array_equal(counts, mask.sum(-1).astype(np.int32))
+    for r in np.ndindex(3, 5):
+        c = counts[r]
+        assert np.array_equal(idx[r][:c], np.flatnonzero(mask[r]))
+        assert (idx[r][c:] == 0).all()       # canonical zero padding
+    back = np.asarray(sparse_mask.csr_to_dense(
+        jnp.asarray(idx), jnp.asarray(counts), g))
+    assert np.array_equal(back, mask)
+
+
+def test_csr_to_dense_ignores_padding_garbage():
+    idx = jnp.asarray([[3, 7, 7, 7]])        # count 2: trailing 7s ignored
+    dense = np.asarray(sparse_mask.csr_to_dense(idx, jnp.asarray([2]), 8))
+    assert np.array_equal(np.flatnonzero(dense[0]), [3, 7])
+    assert dense.max() == 1.0                # duplicates never exceed 1
+
+
+def test_csr_overhead_bytes_units():
+    # (L, B) rows of `bound` int32 indices + one int32 count each
+    assert sparse_mask.csr_overhead_bytes((2, 4), 8) == 2 * 4 * (8 * 4 + 4)
+    assert sparse_mask.csr_overhead_bytes((5,), 1, idx_bytes=2,
+                                          count_bytes=2) == 5 * 4
+
+
+# ---------------------------------------------------------------------------
+# swiglu_csr: executor agreement
+# ---------------------------------------------------------------------------
+
+def _ffn_parts(seed=0, d=16, f=64, b=3, s=1):
+    rng = np.random.default_rng(seed)
+    p = {"w_gate": jnp.asarray(rng.standard_normal((d, f)), jnp.float32)
+                   / np.sqrt(d),
+         "w_up": jnp.asarray(rng.standard_normal((d, f)), jnp.float32)
+                 / np.sqrt(d),
+         "w_down": jnp.asarray(rng.standard_normal((f, d)), jnp.float32)
+                   / np.sqrt(f)}
+    x = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    return p, x
+
+
+def test_swiglu_csr_executors_agree():
+    block, g, bound = 16, 4, 2
+    p, x = _ffn_parts()
+    idx = jnp.asarray([[0, 2], [1, 3], [3, 0]], jnp.int32)
+    counts = jnp.asarray([2, 2, 1], jnp.int32)
+    ref = dl.swiglu_csr_masked(p, x, idx, counts, block=block)
+    for mode in ("xla", "kernel"):
+        out = dl.swiglu_csr(p, x, idx, counts, block=block, apply=mode)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-6, err_msg=mode)
+
+
+def test_swiglu_csr_full_density_matches_dense_ffn():
+    block, g = 16, 4
+    p, x = _ffn_parts(seed=1)
+    idx = jnp.tile(jnp.arange(g, dtype=jnp.int32), (3, 1))
+    counts = jnp.full((3,), g, jnp.int32)
+    dense = dl.swiglu_dense(p, x)
+    for mode in ("dense", "xla", "kernel"):
+        out = dl.swiglu_csr(p, x, idx, counts, block=block, apply=mode)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                                   atol=2e-6, err_msg=mode)
+
+
+def test_swiglu_csr_kernel_rejects_multi_token_rows():
+    p, x = _ffn_parts(s=4)
+    idx = jnp.zeros((3, 1), jnp.int32)
+    counts = jnp.ones((3,), jnp.int32)
+    with pytest.raises(ValueError, match="decode step"):
+        dl.swiglu_csr(p, x, idx, counts, block=16, apply="kernel")
+    with pytest.raises(ValueError, match="unknown CSR FFN apply"):
+        dl.swiglu_csr(p, x, idx, counts, block=16, apply="mosaic")
+
+
+# ---------------------------------------------------------------------------
+# dsg_runtime: host pattern state
+# ---------------------------------------------------------------------------
+
+def test_mirror_csr_copies_donor_rows_to_free_lanes():
+    csr = {"idx": jnp.asarray(np.arange(2 * 3 * 2).reshape(2, 3, 2),
+                              jnp.int32),
+           "counts": jnp.asarray([[1, 2, 1], [2, 1, 2]], jnp.int32)}
+    out = dsg_runtime.mirror_csr(csr, jnp.asarray([False, True, True]),
+                                 jnp.int32(0))
+    idx, counts = np.asarray(out["idx"]), np.asarray(out["counts"])
+    for lane in (1, 2):
+        assert np.array_equal(idx[:, lane], np.asarray(csr["idx"])[:, 0])
+        assert np.array_equal(counts[:, lane],
+                              np.asarray(csr["counts"])[:, 0])
+    assert np.array_equal(idx[:, 0], np.asarray(csr["idx"])[:, 0])
+
+
+def test_double_mask_csr_matches_dense_double_mask():
+    rng = np.random.default_rng(3)
+    block, g = 8, 4
+    x = jnp.asarray(rng.standard_normal((3, g * block)), jnp.float32)
+    mask = jnp.asarray((rng.random((3, g)) < 0.6), jnp.float32)
+    idx, counts = sparse_mask.dense_to_csr(mask, g)
+
+    def norm(z):
+        return z / (1.0 + jnp.mean(jnp.abs(z), axis=-1, keepdims=True))
+
+    want = dm.double_mask(norm, x, mask, block)
+    got = dsg_runtime.double_mask_csr(norm, x, idx, counts, block=block,
+                                      n_groups=g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6)
+
+
+def test_as_serving_config_coercion():
+    assert dsg_runtime.as_serving_config(None) is None
+    assert dsg_runtime.as_serving_config(False) is None
+    assert dsg_runtime.as_serving_config(True) == DSGServingConfig()
+    scfg = DSGServingConfig(refresh_interval=3)
+    assert dsg_runtime.as_serving_config(scfg) is scfg
+    with pytest.raises(TypeError):
+        dsg_runtime.as_serving_config({"refresh_interval": 3})
+
+
+def test_runtime_topk_seeding_and_reset(engine_parts):
+    cfg, _, _ = engine_parts
+    rt = DSGRuntime(cfg, DSGServingConfig(), n_slots=3)
+    assert rt.n_groups == 4 and rt.keep == 2
+    assert rt.bound() == 1                   # all lanes parked
+    scores = np.random.default_rng(0).standard_normal(
+        (cfg.n_layers, rt.n_groups)).astype(np.float32)
+    rt.set_lane_from_scores(1, scores)
+    assert (rt.counts[:, 1] == rt.keep).all()      # exact top-k per layer
+    for l in range(cfg.n_layers):
+        want = np.sort(np.argsort(scores[l])[-rt.keep:])
+        assert np.array_equal(rt.idx[l, 1, :rt.keep], want)
+    assert rt.bound() == sparse_mask.active_group_bound(rt.keep,
+                                                        rt.n_groups)
+    rt.reset_lane(1)
+    assert rt.bound() == 1 and not rt.lane_active.any()
+    assert (rt.counts == 1).all()
+
+
+def test_runtime_ema_deterministic_and_refresh_gates_on_lane(engine_parts):
+    cfg, _, _ = engine_parts
+    mk = lambda: DSGRuntime(cfg, DSGServingConfig(threshold="ema",
+                                                  ema_decay=0.9),
+                            n_slots=2)
+    rng = np.random.default_rng(1)
+    seed_scores = rng.standard_normal((cfg.n_layers, 4)).astype(np.float32)
+    step_scores = rng.standard_normal(
+        (cfg.n_layers, 2, 4)).astype(np.float32)
+    a, b = mk(), mk()
+    for rt in (a, b):
+        rt.set_lane_from_scores(0, seed_scores)
+        rt.update_from_scores(step_scores, lanes=[0, 1])
+    assert np.array_equal(a.idx, b.idx)            # deterministic
+    assert np.array_equal(a.counts, b.counts)
+    assert np.array_equal(a.ema, b.ema)
+    # lane 1 never admitted: update must not touch it
+    assert (a.counts[:, 1] == 1).all() and not a.lane_active[1]
+
+
+def test_runtime_device_csr_cache_invalidation(engine_parts):
+    cfg, _, _ = engine_parts
+    rt = DSGRuntime(cfg, DSGServingConfig(), n_slots=2)
+    first = rt.device_csr(2)
+    assert rt.device_csr(2) is first               # cached per version
+    rt.set_lane_from_scores(0, np.ones((cfg.n_layers, 4), np.float32))
+    assert rt.device_csr(2) is not first           # write invalidates
+    sliced = rt.device_csr(1)
+    assert sliced["idx"].shape == (cfg.n_layers, 2, 1)
+    assert int(np.asarray(sliced["counts"]).max()) <= 1
+
+
+def test_runtime_warm_bounds_by_threshold_mode(engine_parts):
+    cfg, _, _ = engine_parts
+    topk = DSGRuntime(cfg, DSGServingConfig(), n_slots=2)
+    assert topk.warm_bounds() == (2,)              # pinned at keep
+    ema = DSGRuntime(cfg, DSGServingConfig(threshold="ema"), n_slots=2)
+    assert ema.warm_bounds() == (1, 2, 4)          # counts float
+
+
+def test_runtime_validation_raises(engine_parts):
+    cfg, _, _ = engine_parts
+    with pytest.raises(ValueError, match="topk.*ema|'topk' or 'ema'"):
+        DSGRuntime(cfg, DSGServingConfig(threshold="shared"), n_slots=2)
+    with pytest.raises(ValueError, match="refresh_interval"):
+        DSGRuntime(cfg, DSGServingConfig(refresh_interval=0), n_slots=2)
+    off = cfg.replace(dsg=cfg.dsg._replace(enabled=False))
+    with pytest.raises(ValueError, match="enabled"):
+        DSGRuntime(off, DSGServingConfig(), n_slots=2)
+
+
+def test_flop_stats_accounting(engine_parts):
+    cfg, _, _ = engine_parts
+    rt = DSGRuntime(cfg, DSGServingConfig(), n_slots=2)
+    with pytest.raises(ValueError, match="no decode steps"):
+        rt.flop_stats()
+    rt.set_lane_from_scores(0, np.random.default_rng(2).standard_normal(
+        (cfg.n_layers, 4)).astype(np.float32))
+    rt.record_step(active=[0], bound=rt.bound())
+    st = rt.flop_stats()
+    assert st["dense_units"] == cfg.n_layers * 4
+    assert st["csr_units"] == cfg.n_layers * rt.keep
+    assert st["flop_reduction_csr"] == pytest.approx(4 / rt.keep)
+
+
+# ---------------------------------------------------------------------------
+# engine + router differentials (bitwise greedy streams)
+# ---------------------------------------------------------------------------
+
+_DSG = DSGServingConfig(refresh_interval=4)
+
+
+def _spec(parts, apply_mode, **kw):
+    cfg, params, dsg = parts
+    return engine_spec(cfg.replace(dsg_ffn_apply=apply_mode), params, dsg,
+                       dsg_serving=_DSG, **kw)
+
+
+@pytest.fixture(scope="module")
+def reference_streams(engine_parts):
+    """Masked-dense reference: full FFN matmuls, pattern applied as an
+    expanded mask — the bitwise ground truth for every executor."""
+    return run_and_collect(_spec(engine_parts, "dense"),
+                           mixed_traffic(engine_parts[0]))
+
+
+@pytest.mark.parametrize("apply_mode", ["xla", "kernel"])
+def test_sparse_executors_match_dense_reference(engine_parts,
+                                                reference_streams,
+                                                apply_mode):
+    got = run_and_collect(_spec(engine_parts, apply_mode),
+                          mixed_traffic(engine_parts[0]))
+    assert_streams_equal(reference_streams, got, f"apply={apply_mode}")
+
+
+def test_paged_backend_matches_dense_backend(engine_parts,
+                                             reference_streams):
+    got = run_and_collect(
+        _spec(engine_parts, "xla", cache_backend="paged", page_size=8,
+              cache_tokens=160),
+        mixed_traffic(engine_parts[0]))
+    assert_streams_equal(reference_streams, got, "paged backend")
+
+
+def test_streams_invariant_to_slot_count(engine_parts, reference_streams):
+    """Per-lane refresh cadence: a lane refreshes on ITS OWN emitted
+    token count, so co-scheduling width cannot shift selection."""
+    got = run_and_collect(_spec(engine_parts, "xla", n_slots=3),
+                          mixed_traffic(engine_parts[0]))
+    assert_streams_equal(reference_streams, got, "n_slots=3")
+
+
+def test_streams_invariant_to_replica_count(engine_parts,
+                                            reference_streams):
+    for n in (1, 2):
+        got = run_and_collect(_spec(engine_parts, "xla", n_replicas=n),
+                              mixed_traffic(engine_parts[0]))
+        assert_streams_equal(reference_streams, got, f"replicas={n}")
+
+
+def test_measured_window_flop_reduction(engine_parts):
+    """gamma=0.5 topk pins every admitted lane at keep=G/2 groups, so the
+    modeled FFN FLOP reduction of the whole measured window is exactly
+    2x — admission seeding means no dense warm-in dilutes it."""
+    streams, eng = run_and_collect(_spec(engine_parts, "xla"),
+                                   mixed_traffic(engine_parts[0]),
+                                   return_engine=True)
+    st = eng.dsg_rt.flop_stats()
+    assert st["flop_reduction_csr"] == pytest.approx(2.0)
+    assert st["flop_reduction_bound"] == pytest.approx(2.0)
+    assert st["steps"] == eng.steps
+
+
+def test_ema_threshold_mode_runs_and_stays_sparse(engine_parts):
+    """ema selection diverges from topk streams by design; the contract
+    is that it drains the workload and every admitted lane keeps a
+    non-degenerate pattern (>= 1, <= G groups)."""
+    cfg, params, dsg = engine_parts
+    spec = engine_spec(cfg.replace(dsg_ffn_apply="xla"), params, dsg,
+                       dsg_serving=DSGServingConfig(refresh_interval=4,
+                                                    threshold="ema"))
+    streams, eng = run_and_collect(spec, mixed_traffic(cfg),
+                                   return_engine=True)
+    assert all(len(s) > 0 for s in streams.values())
+    assert eng.dsg_rt.counts.min() >= 1
+    assert eng.dsg_rt.counts.max() <= eng.dsg_rt.n_groups
+
+
+# ---------------------------------------------------------------------------
+# wiring guards
+# ---------------------------------------------------------------------------
+
+def test_sharded_executor_rejects_dsg(engine_parts):
+    cfg, params, dsg = engine_parts
+    with pytest.raises(NotImplementedError, match="dsg"):
+        Router(cfg, params, dsg, n_replicas=2, exec_mode="sharded",
+               n_slots=2, max_seq=64, prompt_bucket=32,
+               dsg_serving=_DSG)
+
+
+def test_check_bench_envelope_validation(tmp_path):
+    """scripts/check_bench.py accepts the shared envelope and names the
+    violation for each malformed variant (used via --root in CI-less
+    runs; CI points it at the repo root)."""
+    import importlib.util
+    import json
+    from pathlib import Path
+
+    spec = importlib.util.spec_from_file_location(
+        "check_bench",
+        Path(__file__).resolve().parent.parent / "scripts"
+        / "check_bench.py")
+    cb = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(cb)
+
+    good = {"name": "x",
+            "gates": [{"description": "d", "threshold": 1.0,
+                       "value": 2.0, "passed": True}],
+            "ratio": 2.0,
+            "timestamps": {"start": "2026-08-08T00:00:00+00:00",
+                           "end": "2026-08-08T00:00:05+00:00"},
+            "results": {}}
+
+    def write(payload):
+        p = tmp_path / "BENCH_x.json"
+        p.write_text(json.dumps(payload))
+        return p
+
+    assert cb.check_file(write(good)) == []
+    for mutate, needle in (
+            (lambda d: d.pop("ratio"), "missing"),
+            (lambda d: d.update(extra=1), "unexpected top-level"),
+            (lambda d: d.update(gates=[]), "non-empty"),
+            (lambda d: d["gates"][0].update(passed=False), "FAILED"),
+            (lambda d: d["timestamps"].update(end="2026-08-07T23:00:00"),
+             "end < start"),
+            (lambda d: d.update(name=""), "non-empty string")):
+        payload = json.loads(json.dumps(good))
+        mutate(payload)
+        problems = cb.check_file(write(payload))
+        assert problems and any(needle in p for p in problems), (
+            needle, problems)
+
+
+def test_engine_validation_raises(engine_parts):
+    cfg, params, dsg = engine_parts
+    kw = dict(n_slots=2, max_seq=64, prompt_bucket=32)
+    with pytest.raises(ValueError, match="enabled"):
+        ServingEngine(cfg.replace(dsg=cfg.dsg._replace(enabled=False)),
+                      params, None, dsg_serving=True, **kw)
+    with pytest.raises(ValueError, match="SwiGLU"):
+        ServingEngine(cfg.replace(moe_experts=4, moe_topk=2), params,
+                      dsg, dsg_serving=True, **kw)
+    with pytest.raises(ValueError, match="relu_sum"):
+        ServingEngine(cfg.replace(dsg=cfg.dsg._replace(score="abs_sum")),
+                      params, dsg, dsg_serving=True, **kw)
