@@ -1,0 +1,262 @@
+"""Chaos gate for fault-tolerant serving: kill a replica mid-decode and
+require bitwise-identical output plus bounded goodput loss.
+
+The run drives identical mixed traffic through the same warmed Router
+twice per repeat — a HEALTHY pass (no injector attached) and a CHAOS
+pass where `ServingFaultInjector` kills replica 1 at a fixed engine step
+with `max_replica_restarts=0`, so the replica stays DEAD and its queued +
+in-flight requests replay on the 2 survivors.  Because greedy decode
+under per-row DRS selection is solo-deterministic (the invariant pinned
+since PR 1), replay-from-prompt must reproduce the healthy streams
+bit-for-bit: stream divergence here means failover resumed a corrupted
+partial instead of replaying.
+
+Gates (CI, smoke mode; emits BENCH_router_faults.json):
+  * every request completes with status "ok" despite the mid-run kill;
+  * chaos merged streams are bitwise equal to the healthy pass;
+  * goodput: chaos modeled parallel tok/s >= (survivors/replicas x 0.8)
+    of the healthy baseline (best paired repeat — replay wastes the dead
+    replica's partial work, so perfection is surviving-capacity scaled);
+  * the injector fired its kill exactly once per chaos pass;
+  * a deadline-expired request surfaces status "timed_out" and drain()
+    returns (no hang) — the graceful-degradation contract.
+
+  PYTHONPATH=src python benchmarks/bench_router_faults.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from common import bench_envelope, gate, write_bench
+
+from repro import configs
+from repro.models import api
+from repro.runtime.fault_tolerance import ReplicaFault, ServingFaultInjector
+from repro.serving.router import FaultToleranceConfig, Router
+from repro.serving.scheduler import Request
+from repro.serving.workload import mixed_requests, warmup_router
+
+
+def _reset(router: Router):
+    """Steady-state reset between repeats (the engines stay compiled)."""
+    for eng in router.engines:
+        eng.done.clear()
+        eng.steps = 0
+        eng.decode_seconds = 0.0
+        eng.decode_tokens = 0
+    router.reset_counters()
+    router.reset_health()
+
+
+def _drive(router, reqs):
+    for r in reqs:
+        router.submit(r)
+    done = router.run(max_steps=100_000)
+    toks = sum(len(r.output) for r in done.values())
+    makespan = router.makespan_seconds()
+    return {
+        "requests": len(done),
+        "completed_ok": sum(r.status == "ok" for r in done.values()),
+        "retries": sum(r.retries for r in done.values()),
+        "tokens": toks,
+        "makespan_s": makespan,
+        "parallel_tok_per_s": toks / max(makespan, 1e-9),
+        "busy_s": list(router.busy_seconds),
+        "replica_health": [h.state for h in router.health],
+        "outputs": {u: list(r.output) for u, r in done.items()},
+    }
+
+
+def run(args) -> dict:
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    cfg = cfg.replace(dsg=cfg.dsg._replace(threshold_mode="topk"))
+    key = jax.random.PRNGKey(0)
+    params = api.init_model(key, cfg)
+    dsg = api.init_dsg(jax.random.fold_in(key, 1), params, cfg)
+
+    # zero restarts: the killed replica stays dead, so the goodput gate
+    # measures true degraded-capacity operation (survivors/replicas)
+    router = Router(cfg, params, dsg, n_replicas=args.replicas,
+                    policy="round_robin", n_slots=args.slots,
+                    max_seq=args.max_seq, prompt_bucket=args.prompt_bucket,
+                    cache_backend=args.cache_backend,
+                    page_size=args.page_size, seed=args.seed,
+                    fault_tolerance=FaultToleranceConfig(
+                        max_replica_restarts=0, max_retries=args.replicas))
+    warmup_router(router, cfg.vocab)
+    injector = ServingFaultInjector(
+        [ReplicaFault(replica=args.kill_replica, step=args.kill_step)])
+
+    def traffic():
+        return mixed_requests(cfg.vocab, args.requests, seed=args.seed,
+                              prompt_range=(8, args.prompt_bucket),
+                              max_new_range=(8, 40))
+
+    # repeats interleave healthy/chaos so host drift hits both sides
+    # equally; the goodput ratio is the BEST paired repeat (the
+    # bench_router discipline)
+    results = {}
+    ratios = []
+    faults_fired = []
+    streams_matched = []
+    for _ in range(args.repeats):
+        pair = {}
+        for mode in ("healthy", "chaos"):
+            _reset(router)
+            if mode == "chaos":
+                injector.reset()
+                injector.attach(router.engines)
+            st = _drive(router, traffic())
+            if mode == "chaos":
+                injector.detach(router.engines)
+                faults_fired.append(len(injector.log))
+                streams_matched.append(
+                    st["outputs"] == results["healthy"]["outputs"])
+            pair[mode] = st["parallel_tok_per_s"]
+            best = results.get(mode)
+            if (best is None or st["parallel_tok_per_s"]
+                    > best["parallel_tok_per_s"]):
+                results[mode] = st
+        ratios.append(pair["chaos"] / pair["healthy"])
+    router.close()
+    results["paired_ratios"] = sorted(ratios)
+    results["faults_fired"] = faults_fired
+    results["streams_matched"] = streams_matched
+
+    # deadline pass: fill every lane with long generations, then submit a
+    # request whose deadline expires while it waits in the router queue —
+    # it must surface as timed_out, and drain must still return
+    _reset(router)
+    lanes = args.replicas * args.slots
+    longs = mixed_requests(cfg.vocab, lanes, seed=args.seed + 1,
+                           prompt_range=(8, 24), max_new_range=(40, 48))
+    late = Request(uid=lanes,
+                   prompt=longs[0].prompt.copy(), max_new=4,
+                   deadline_s=1e-4)
+    for r in longs:
+        router.submit(r)
+    router.submit(late)
+    done = router.drain(max_steps=100_000)
+    results["deadline"] = {
+        "statuses": {u: r.status for u, r in sorted(done.items())},
+        "timed_out_uid": late.uid,
+        "drained": len(done) == lanes + 1,
+    }
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false",
+                    help="use the full-size config (needs accelerators)")
+    ap.add_argument("--replicas", type=int, default=3)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--prompt-bucket", type=int, default=128)
+    ap.add_argument("--cache-backend", choices=("dense", "paged"),
+                    default="dense")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kill-replica", type=int, default=1)
+    ap.add_argument("--kill-step", type=int, default=4,
+                    help="engine step (post-warmup) at which the kill "
+                         "fires — mid-decode for the default traffic")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    out = args.out or "BENCH_router_faults.json"
+    t0 = time.time()
+    results = run(args)
+
+    ratios = results.pop("paired_ratios")
+    faults_fired = results.pop("faults_fired")
+    streams_matched = results.pop("streams_matched")
+    deadline = results["deadline"]
+    print(f"{'pass':>8} {'ok':>5} {'tokens':>7} {'par tok/s':>10} "
+          f"{'makespan s':>11} {'health':>26}")
+    for name in ("healthy", "chaos"):
+        st = results[name]
+        print(f"{name:>8} {st['completed_ok']:>2}/{st['requests']:<2} "
+              f"{st['tokens']:>7} {st['parallel_tok_per_s']:>10.1f} "
+              f"{st['makespan_s']:>11.2f} "
+              f"{' '.join(st['replica_health']):>26}")
+
+    surviving = args.replicas - 1
+    goodput_floor = surviving / args.replicas * 0.8
+    goodput = ratios[-1]                        # best paired repeat
+    all_ok = (results["chaos"]["completed_ok"]
+              == results["chaos"]["requests"] == args.requests)
+    streams_ok = bool(streams_matched) and all(streams_matched)
+    fired_once = all(n == 1 for n in faults_fired)
+    timed_out_ok = (deadline["drained"] and deadline["statuses"]
+                    [deadline["timed_out_uid"]] == "timed_out")
+
+    payload = {name: {k: v for k, v in st.items() if k != "outputs"}
+               for name, st in results.items() if name != "deadline"}
+    payload["deadline"] = deadline
+    payload["paired_ratios"] = ratios
+    payload["chaos_vs_healthy_goodput"] = goodput
+    payload["faults_fired_per_repeat"] = faults_fired
+    payload["streams_matched_per_repeat"] = streams_matched
+    payload["config"] = {"replicas": args.replicas, "slots": args.slots,
+                         "requests": args.requests,
+                         "cache_backend": args.cache_backend,
+                         "kill_replica": args.kill_replica,
+                         "kill_step": args.kill_step}
+    gates = [
+        gate("every request completes ok despite mid-run replica kill",
+             1.0, float(all_ok), all_ok),
+        gate("chaos merged streams bitwise equal to healthy run",
+             1.0, float(streams_ok), streams_ok),
+        gate(f"chaos goodput >= {goodput_floor:.3f}x healthy "
+             f"({surviving}/{args.replicas} survivors x 0.8, best paired "
+             f"repeat)", goodput_floor, goodput, goodput >= goodput_floor),
+        gate("kill fault fires exactly once per chaos pass",
+             1.0, float(fired_once), fired_once),
+        gate("deadline-expired request surfaces timed_out without "
+             "hanging drain", 1.0, float(timed_out_ok), timed_out_ok),
+    ]
+    # write first: a red run leaves a diagnosable artifact
+    write_bench(out, bench_envelope(
+        "router_faults", gates=gates, ratio=goodput, t_start=t0,
+        results=payload))
+
+    # explicit raises, not asserts: CI gates, survive python -O
+    if not all_ok:
+        raise SystemExit(
+            f"FAIL: chaos pass completed {results['chaos']['completed_ok']}"
+            f" of {args.requests} requests ok (failover lost work)")
+    if not streams_ok:
+        raise SystemExit(
+            "FAIL: chaos merged streams diverge from the healthy run "
+            "(failover must replay from the prompt, bit-identical)")
+    print("chaos merged streams identical to healthy run ✓")
+    if not fired_once:
+        raise SystemExit(
+            f"FAIL: kill fault fired {faults_fired} times per repeat "
+            f"(expected exactly once)")
+    if not timed_out_ok:
+        raise SystemExit(
+            f"FAIL: deadline-expired request surfaced as "
+            f"{deadline['statuses'].get(deadline['timed_out_uid'])!r} "
+            f"(expected 'timed_out'; drained={deadline['drained']})")
+    print("deadline-expired request surfaced timed_out, drain returned ✓")
+    print(f"chaos / healthy goodput: {goodput:.2f}x "
+          f"(floor {goodput_floor:.3f}; all paired: "
+          f"{' '.join(f'{r:.2f}' for r in ratios)})")
+    if goodput < goodput_floor:
+        raise SystemExit(
+            f"FAIL: chaos goodput must reach >= {goodput_floor:.3f}x "
+            f"healthy (got {goodput:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

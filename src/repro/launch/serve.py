@@ -22,6 +22,11 @@ more memory than they save, so the search stays online).  Two workloads:
     stepping reports the MODELED data-parallel makespan (slowest
     replica's busy time), threaded / sharded run the replica group in
     true parallel and report the MEASURED makespan.
+    --fault-tolerance opts the router into failure containment
+    (docs/fault_tolerance.md: health states, failover, retry budgets;
+    tune with --max-replica-restarts/--max-retries/--deadline-s/
+    --stall-timeout-s) and --chaos KIND@REPLICA:STEP injects
+    deterministic faults (kill/delay/poison) to watch it work.
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
       --smoke --batch 4 --prompt-len 32 --gen 16
@@ -145,6 +150,32 @@ def main():
                     help="per-request sampling temperature (0 = greedy)")
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus mass kept when sampling")
+    # fault tolerance + chaos (docs/fault_tolerance.md)
+    ap.add_argument("--chaos", action="append", default=[],
+                    metavar="KIND@REPLICA:STEP[:SECONDS]",
+                    help="mixed workload: inject a deterministic fault "
+                         "(runtime/fault_tolerance.py) — kill@1:40 "
+                         "raises on replica 1 at engine step 40, "
+                         "delay@0:10:0.05 sleeps 0.05s, poison@2:9 "
+                         "corrupts resident outputs then raises; "
+                         "repeatable; implies --fault-tolerance")
+    ap.add_argument("--fault-tolerance", action="store_true",
+                    help="opt the router into failure containment "
+                         "(serving/router.py FaultToleranceConfig); "
+                         "without it a replica failure crashes the run")
+    ap.add_argument("--max-replica-restarts", type=int, default=1,
+                    help="restarts before a failed replica is marked "
+                         "DEAD for good")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="per-request re-dispatch budget after replica "
+                         "failures; beyond it the request fails")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline (submit->finish); expired "
+                         "queued requests finish with status timed_out")
+    ap.add_argument("--stall-timeout-s", type=float, default=None,
+                    help="threaded executor: seconds without step "
+                         "progress before a replica is marked SUSPECT "
+                         "and aborted")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -170,15 +201,44 @@ def main():
     params = api.init_model(key, cfg)
     dsg = api.init_dsg(jax.random.fold_in(key, 1), params, cfg)
 
+    if (args.chaos or args.fault_tolerance) and args.workload != "mixed":
+        ap.error("--chaos/--fault-tolerance drive the serving engine; "
+                 "add --workload mixed")
+
     if args.workload == "mixed":
+        from repro.runtime.fault_tolerance import ReplicaFault
         from repro.serving.dsg_runtime import DSGServingConfig
+        from repro.serving.router import FaultToleranceConfig
         from repro.serving.workload import mixed_requests, run_workload
+
+        def _parse_chaos(spec: str) -> ReplicaFault:
+            # KIND@REPLICA:STEP[:SECONDS], e.g. kill@1:40, delay@0:10:0.05
+            try:
+                kind, _, rest = spec.partition("@")
+                replica, step, *extra = rest.split(":")
+                return ReplicaFault(replica=int(replica), step=int(step),
+                                    kind=kind,
+                                    delay_s=(float(extra[0]) if extra
+                                             else 0.05))
+            except ValueError as e:
+                ap.error(f"bad --chaos spec {spec!r} "
+                         f"(KIND@REPLICA:STEP[:SECONDS]): {e}")
+
+        faults = [_parse_chaos(s) for s in args.chaos] or None
+        ft = (FaultToleranceConfig(
+            max_replica_restarts=args.max_replica_restarts,
+            max_retries=args.max_retries,
+            stall_timeout_s=args.stall_timeout_s)
+            if (args.fault_tolerance or faults) else None)
         dsg_serving = (DSGServingConfig(
             refresh_interval=args.dsg_refresh_interval)
             if args.dsg_serving else None)
         reqs = mixed_requests(cfg.vocab, args.requests, seed=args.seed,
                               temperature=args.temperature,
                               top_p=args.top_p)
+        if args.deadline_s is not None:
+            for r in reqs:
+                r.deadline_s = args.deadline_s
         stats = run_workload(cfg, params, dsg, reqs,
                              admission=args.admission, n_slots=args.slots,
                              max_seq=args.max_seq,
@@ -190,6 +250,7 @@ def main():
                              route_policy=args.route_policy,
                              exec_mode=args.exec_mode,
                              dsg_serving=dsg_serving,
+                             fault_tolerance=ft, faults=faults,
                              seed=args.seed)
         tag = f"{stats['admission']}/{stats['cache_backend']}"
         if "route_policy" in stats:
@@ -209,6 +270,12 @@ def main():
             print(f"  {kind} parallel makespan {stats['makespan_s']:.2f}s "
                   f"= {stats['parallel_tok_per_s']:.1f} tok/s across "
                   f"{stats['replicas']} replicas ({stats['exec_mode']})")
+        if "replica_health" in stats:
+            print(f"  fault tolerance: {stats['completed_ok']} ok, "
+                  f"{stats['failed']} failed, {stats['timed_out']} timed "
+                  f"out, {stats['retries']} retries, "
+                  f"{stats['faults_fired']} fault(s) fired; replica "
+                  f"health {stats['replica_health']}")
         return
 
     rng = np.random.default_rng(0)

@@ -1,5 +1,5 @@
 """Fault-tolerance runtime: checkpoint/restart loop, straggler monitor,
-failure injection for tests.
+failure injection for tests, and the serving-grade chaos injector.
 
 At 1000+ nodes the mean time between node failures drops below the length
 of a training run; the loop here implements the standard contract:
@@ -13,6 +13,14 @@ of a training run; the loop here implements the standard contract:
     (> factor x rolling median) — on a real fleet this feeds the scheduler
     (hot-swap of the slow host); here it logs and counts, and tests verify
     detection on injected delays.
+
+The serving side applies the same replay contract to replica death
+instead of host preemption: `ServingFaultInjector` deterministically
+kills / delays / poisons a serving replica at a chosen engine step, and
+the Router's failover (serving/router.py, docs/fault_tolerance.md)
+replays the reclaimed requests from their prompts on healthy replicas —
+bit-identical at temperature 0 because each replica is solo-
+deterministic.  benchmarks/bench_router_faults.py gates exactly that.
 """
 from __future__ import annotations
 
@@ -20,7 +28,7 @@ import logging
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, List, Optional, Sequence
 
 log = logging.getLogger("repro.runtime")
 
@@ -59,6 +67,103 @@ class FaultInjector:
             raise self.exc(f"injected failure at step {step}")
 
 
+# -- serving chaos harness ---------------------------------------------------
+
+#: Token value a "poison" fault writes over a lane's last emitted token —
+#: obviously out-of-vocab so a poisoned stream that survives failover
+#: (instead of being replayed from the prompt) cannot pass a bitwise
+#: stream-equality gate by accident.
+POISON_TOKEN = -7
+
+FAULT_KINDS = ("kill", "delay", "poison")
+
+
+class InjectedFault(RuntimeError):
+    """The injected replica-crash exception: what a real device loss /
+    worker OOM surfaces as, minus the flakiness."""
+
+
+@dataclass(frozen=True)
+class ReplicaFault:
+    """One deterministic serving fault: when replica `replica`'s engine
+    reaches step `step`, do `kind` —
+
+      kill   — raise InjectedFault at the step boundary, before the
+               step's tokens land (the clean worker-death case);
+      delay  — sleep `delay_s` inside the step (a straggler; trips the
+               router's stall timeout when one is configured);
+      poison — overwrite the last emitted token of every resident lane
+               with POISON_TOKEN, then raise (the dirty death: failover
+               must discard the partial output and replay from the
+               prompt, or the corruption survives into the stream).
+    """
+    replica: int
+    step: int
+    kind: str = "kill"
+    delay_s: float = 0.05
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {FAULT_KINDS}")
+        if self.replica < 0 or self.step < 0:
+            raise ValueError(f"replica/step must be >= 0 "
+                             f"(got {self.replica}/{self.step})")
+
+
+class ServingFaultInjector:
+    """Serving-grade FaultInjector: deterministic faults keyed on
+    (replica index, engine step), each firing exactly ONCE even across
+    replica restarts or benchmark repeats (until `reset()` re-arms).
+
+    `attach(engines)` stamps each engine's `replica_index` and installs
+    the injector as its `fault_injector`; `ServingEngine.begin_step()`
+    calls `on_step(engine)` at every step boundary.  Attach AFTER warmup:
+    warmup resets step counters, so a fault keyed on an early step would
+    otherwise fire inside the compile pass."""
+
+    def __init__(self, faults: Sequence[ReplicaFault]):
+        self.faults: List[ReplicaFault] = [
+            f if isinstance(f, ReplicaFault) else ReplicaFault(*f)
+            for f in faults]
+        self._fired: set = set()
+        self.log: List[dict] = []      # faults that actually fired
+
+    def attach(self, engines) -> None:
+        for r, eng in enumerate(engines):
+            eng.replica_index = r
+            eng.fault_injector = self
+
+    def detach(self, engines) -> None:
+        for eng in engines:
+            if eng.fault_injector is self:
+                eng.fault_injector = None
+
+    def reset(self) -> None:
+        """Re-arm every fault (benchmark repeats)."""
+        self._fired.clear()
+        self.log.clear()
+
+    def on_step(self, eng) -> None:
+        for k, f in enumerate(self.faults):
+            if (k in self._fired or f.replica != eng.replica_index
+                    or f.step != eng.steps):
+                continue
+            self._fired.add(k)
+            self.log.append({"replica": f.replica, "step": f.step,
+                             "kind": f.kind})
+            if f.kind == "delay":
+                time.sleep(f.delay_s)
+                continue
+            if f.kind == "poison":
+                for slot in eng.slots:
+                    if slot.req is not None and slot.req.output:
+                        slot.req.output[-1] = POISON_TOKEN
+            raise InjectedFault(
+                f"injected {f.kind} at replica {f.replica} "
+                f"step {f.step}")
+
+
 def run_with_restarts(*, step_fn: Callable, state, make_batch: Callable,
                       ckpt, total_steps: int, start_step: int = 0,
                       ckpt_every: int = 20, max_retries: int = 3,
@@ -76,12 +181,12 @@ def run_with_restarts(*, step_fn: Callable, state, make_batch: Callable,
     retries = 0
     while step < total_steps:
         try:
-            t0 = time.time()
+            t0 = time.perf_counter()
             if injector is not None:
                 injector.maybe_fail(step)
             batch = make_batch(step)
             state, metrics = step_fn(state, batch)
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             monitor.record(step, dt)
             history.append({"step": step, "seconds": dt, **{
                 k: float(v) for k, v in metrics.items()}})

@@ -62,6 +62,22 @@ from repro.serving import scheduler as sched
 EXEC_MODES = ("sequential", "threaded", "sharded")
 
 
+class ReplicaFailure(RuntimeError):
+    """A replica's engine raised during a step.
+
+    Carries WHICH replica (`index`) and the original exception (`cause`)
+    so the router's fault-tolerance layer can contain the failure — mark
+    the replica, reclaim its requests (serving/router.py).  str() embeds
+    the cause message, so fail-fast callers that match on the original
+    text (e.g. "engine stalled") keep working when fault tolerance is
+    off and the wrapper re-raises."""
+
+    def __init__(self, index: int, cause: BaseException):
+        super().__init__(f"replica {index} failed: {cause}")
+        self.index = index
+        self.cause = cause
+
+
 class ReplicaProxy:
     """Executor-owned handle for one replica.
 
@@ -184,14 +200,25 @@ class SequentialExecutor(ReplicaExecutor):
 
     def step_all(self, indices):
         t0 = time.perf_counter()
-        for i in indices:
-            ti = time.perf_counter()
-            self.engines[i].step()
-            self.busy_seconds[i] += time.perf_counter() - ti
-        self.wall_seconds += time.perf_counter() - t0
+        try:
+            for i in indices:
+                ti = time.perf_counter()
+                try:
+                    # each engine's step is atomic (begin -> dispatch ->
+                    # commit inside), so a failure here never corrupts a
+                    # sibling replica's state — replicas after `i` simply
+                    # skip this tick, which lockstep never promised anyway
+                    self.engines[i].step()
+                except BaseException as e:
+                    raise ReplicaFailure(i, e) from e
+                finally:
+                    self.busy_seconds[i] += time.perf_counter() - ti
+        finally:
+            self.wall_seconds += time.perf_counter() - t0
 
 
-@locked_by("_cond", "_idle", "_errors", "busy_seconds", "_stop")
+@locked_by("_cond", "_idle", "_errors", "busy_seconds", "_stop",
+           "_progress")
 @owned_by("router", "_threads", "wall_seconds")
 class ThreadedExecutor(ReplicaExecutor):
     """One free-running worker thread per replica.
@@ -238,7 +265,11 @@ class ThreadedExecutor(ReplicaExecutor):
                       else threading.Condition(threading.RLock()))
         self._router_wake = threading.Event()
         self._idle = [True] * len(self.engines)
-        self._errors: List[BaseException] = []
+        self._errors: List[ReplicaFailure] = []
+        # per-replica monotonic stamp of the last completed step — the
+        # drive loop's stall-timeout detector compares against it while
+        # a worker is busy (fault_tolerance.stall_timeout_s)
+        self._progress = [time.perf_counter()] * len(self.engines)
         self._stop = False
         self._threads: Optional[List[threading.Thread]] = None
         if self._tsan:
@@ -246,6 +277,9 @@ class ThreadedExecutor(ReplicaExecutor):
                                      label="ThreadedExecutor._idle")
             self._errors = GuardedList(cond=self._cond,
                                        label="ThreadedExecutor._errors")
+            self._progress = GuardedList(
+                self._progress, cond=self._cond,
+                label="ThreadedExecutor._progress")
             self.busy_seconds = GuardedList(
                 self.busy_seconds, cond=self._cond,
                 label="ThreadedExecutor.busy_seconds")
@@ -316,6 +350,11 @@ class ThreadedExecutor(ReplicaExecutor):
                 if self._stop:
                     return
                 self._idle[i] = False
+                # fresh stall clock at the idle->busy transition: the
+                # stamp would otherwise date from the last completed
+                # step, and a worker woken after a long idle would be
+                # falsely suspected before its first step finishes
+                self._progress[i] = time.perf_counter()
                 self._own_engine(i, threading.current_thread())
             while True:                      # step outside the lock
                 done0 = len(eng.done)
@@ -325,7 +364,7 @@ class ThreadedExecutor(ReplicaExecutor):
                     eng.step()
                 except BaseException as e:   # surfaced by the drive loop
                     with self._cond:
-                        self._errors.append(e)
+                        self._errors.append(ReplicaFailure(i, e))
                         self._idle[i] = True
                         self._own_engine(i, None)
                         self._router_wake.set()
@@ -336,6 +375,7 @@ class ThreadedExecutor(ReplicaExecutor):
                     # an unlocked += is a lost-update race between the
                     # read-modify-write and reset_timing's rebind
                     self.busy_seconds[i] += dt
+                    self._progress[i] = time.perf_counter()
                 # wake the router only on events a policy can act on — a
                 # retirement freed a lane, or an admission drained this
                 # replica's queue.  Signaling every step would have the
@@ -355,18 +395,46 @@ class ThreadedExecutor(ReplicaExecutor):
     def drive(self, router, max_steps: int):
         """Drain the router: dispatch from this (the router's) thread,
         let workers free-run, return when no queued or resident work is
-        left.  Re-raises worker exceptions, and raises the router-stall
-        error when every worker is parked yet the policy still defers
-        the queue head (retirements can never unblock it)."""
+        left.  Worker exceptions re-raise — unless the router opted into
+        fault tolerance, in which case they are contained (reclaim +
+        re-dispatch, serving/router.py) and the dead worker is
+        restaffed; likewise the router-stall error (all workers parked,
+        policy still defers the head) degrades to explicit per-request
+        failure instead of raising.  With `stall_timeout_s` set, a busy
+        worker making no step progress gets its replica marked SUSPECT
+        and its engine aborted at the next step boundary."""
         self._ensure_threads()
+        ft = getattr(router, "ft", None)
         t0 = time.perf_counter()
         try:
             with self._cond:
+                now = time.perf_counter()
+                for i in range(len(self.engines)):
+                    self._progress[i] = now    # stall clock starts now
                 self._cond.notify_all()      # work may predate the drive
             while router.steps < max_steps:
                 with self._cond:             # dispatch + parked check are
                     if self._errors:         # atomic vs worker parking
-                        raise self._errors.pop(0)
+                        err = self._errors.pop(0)
+                        if not router._handle_replica_failure(err):
+                            raise err
+                        # contained: restaff the dead worker (a restarted
+                        # replica needs one; a DEAD replica's worker just
+                        # parks — routable() keeps it starved) and give
+                        # the revived replica a fresh stall clock
+                        self._progress[err.index] = time.perf_counter()
+                        self._ensure_threads()
+                        self._cond.notify_all()
+                        router.steps += 1
+                        continue
+                    if ft is not None and ft.stall_timeout_s is not None:
+                        now = time.perf_counter()
+                        for i in range(len(self.engines)):
+                            if (not self._idle[i]
+                                    and now - self._progress[i]
+                                    > ft.stall_timeout_s):
+                                router._on_replica_stall(i)
+                    router._expire_deadlines()
                     router._dispatch()       # safe: RLock is re-entrant
                     all_parked = (all(self._idle) and
                                   not any(self.has_work(e)
@@ -374,6 +442,10 @@ class ThreadedExecutor(ReplicaExecutor):
                     if all_parked and not router.queue:
                         return               # drained
                     if all_parked and router.queue:
+                        if ft is not None:
+                            router._fail_undispatchable()
+                            router.steps += 1
+                            continue
                         raise RuntimeError(
                             f"router stalled: {len(router.queue)} queued "
                             f"request(s) undispatchable by policy "
@@ -406,17 +478,30 @@ class ThreadedExecutor(ReplicaExecutor):
 
     @runs_on("router")
     def close(self):
+        """Idempotent shutdown: signal every worker, join each with a
+        bounded timeout, and RAISE naming the workers that failed to
+        exit instead of silently leaking their threads.  A straggler is
+        a worker stuck inside a single step (device call); _stop stays
+        set so it exits at its next step boundary rather than
+        resurrecting — call close() again to confirm the shutdown."""
         with self._cond:
+            threads = self._threads or ()
+            if not threads:
+                return                   # already closed: no-op
             self._stop = True
             self._cond.notify_all()
-        threads = self._threads or ()
         for t in threads:
             t.join(timeout=5.0)
-        if any(t.is_alive() for t in threads):
-            # a worker is still inside a step; leave _stop set so it
-            # exits at the next step boundary instead of resurrecting —
-            # restarting now could put two workers on one engine
-            return
+        stuck = [t.name for t in threads if t.is_alive()]
+        if stuck:
+            # restarting now could put two workers on one engine, so the
+            # executor stays in the stopped state until the straggler
+            # exits (a later _ensure_threads checks _stop)
+            raise RuntimeError(
+                f"ThreadedExecutor.close(): worker thread(s) "
+                f"{', '.join(stuck)} did not exit within 5s (stuck "
+                f"inside a step); they exit at their next step boundary "
+                f"— call close() again to confirm shutdown")
         with self._cond:
             self._threads = None
             self._stop = False
@@ -506,6 +591,9 @@ class ShardedExecutor(ReplicaExecutor):
             jax.vmap(sample,
                      in_axes=(p_ax, d_ax, 0, 0, 0, 0, 0, None, 0, 0, 0, 0)),
             donate_argnums=(3,), static_argnums=(7,))
+        # begin-phase failures deferred past the group step (one raise
+        # per tick keeps sibling replicas consistent; see step_all)
+        self._pending_failures: List[ReplicaFailure] = []
 
     def _stack(self, leaves):
         x = jnp.stack(leaves)
@@ -554,16 +642,30 @@ class ShardedExecutor(ReplicaExecutor):
 
     def step_all(self, indices):
         t0 = time.perf_counter()
+        if self._pending_failures:       # deferred from the previous tick
+            raise self._pending_failures.pop(0)
         idx = set(indices)
-        plans, real = [], []
+        plans, real, failures = [], [], []
         for i, eng in enumerate(self.engines):
-            plan = eng.begin_step() if i in idx else None  # may raise
+            plan = None
+            if i in idx:
+                try:
+                    plan = eng.begin_step()
+                except BaseException as e:
+                    # siblings that already began this tick have emitted
+                    # tokens — finish the group step WITHOUT the failed
+                    # replica (it rides a dummy plan) and raise after
+                    # commit, so no sibling double-emits on the retry
+                    failures.append(ReplicaFailure(i, e))
             if plan is not None:
                 real.append(i)
             plans.append(plan if plan is not None
                          else self._dummy_plan(eng))
         if not real:
             self.wall_seconds += time.perf_counter() - t0
+            if failures:
+                self._pending_failures.extend(failures[1:])
+                raise failures[0]
             return
         live = max(p.live_pages for p in plans)
         sample = any(p.sample for p in plans)
@@ -583,6 +685,9 @@ class ShardedExecutor(ReplicaExecutor):
                 self.engines[i].commit_step(plan, nxt_host[i], share)
                 self.busy_seconds[i] += wall
         self.wall_seconds += wall
+        if failures:
+            self._pending_failures.extend(failures[1:])
+            raise failures[0]
 
     def warm(self, sample: bool = False):
         """Pre-compile the group step for every live-page bucket this

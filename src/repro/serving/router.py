@@ -57,15 +57,89 @@ from __future__ import annotations
 
 import collections
 import time
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 
 from repro.analysis.contracts import owned_by, runs_on
-from repro.serving.parallel_exec import EXEC_MODES, get_executor
+from repro.serving.parallel_exec import (EXEC_MODES, ReplicaFailure,
+                                         get_executor)
 from repro.serving.scheduler import Request, ServingEngine
 
 POLICIES = ("round_robin", "least_queue", "least_pages")
+
+HEALTH_STATES = ("healthy", "suspect", "dead")
+
+
+@dataclass(frozen=True)
+class FaultToleranceConfig:
+    """Failover policy for a Router (docs/fault_tolerance.md).
+
+    Passing any config (even the defaults) OPTS IN to fault tolerance:
+    replica failures are contained (reclaim + re-dispatch) instead of
+    re-raised, and undispatchable requests finish with an explicit
+    `failed`/`timed_out` status instead of raising the stall error.
+    `Router(fault_tolerance=None)` — the default — keeps the historical
+    fail-fast behavior bit-for-bit.
+
+      max_replica_restarts — how many times a failed replica is returned
+          to service before it is marked DEAD for good (0 = first
+          failure is fatal to the replica).
+      max_retries — per-request re-dispatch budget: a request reclaimed
+          from a failed replica more than this many times finishes with
+          status "failed" instead of being requeued.
+      stall_timeout_s — threaded executor only: a replica whose worker
+          makes no step progress for this long is marked SUSPECT and
+          asked to abort at its next step boundary (None = no stall
+          detection; lockstep executors step in-process and cannot
+          stall-detect themselves).
+    """
+    max_replica_restarts: int = 1
+    max_retries: int = 2
+    stall_timeout_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.max_replica_restarts < 0:
+            raise ValueError(f"max_replica_restarts must be >= 0 "
+                             f"(got {self.max_replica_restarts})")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0 "
+                             f"(got {self.max_retries})")
+        if self.stall_timeout_s is not None and self.stall_timeout_s <= 0:
+            raise ValueError(f"stall_timeout_s must be positive or None "
+                             f"(got {self.stall_timeout_s})")
+
+
+def as_ft_config(ft) -> Optional[FaultToleranceConfig]:
+    """None | True | dict | FaultToleranceConfig -> config or None."""
+    if ft is None or isinstance(ft, FaultToleranceConfig):
+        return ft
+    if ft is True:
+        return FaultToleranceConfig()
+    if isinstance(ft, dict):
+        return FaultToleranceConfig(**ft)
+    raise ValueError(f"fault_tolerance must be None, True, a dict, or a "
+                     f"FaultToleranceConfig (got {ft!r})")
+
+
+@dataclass
+class ReplicaHealth:
+    """Per-replica health state machine: HEALTHY -> SUSPECT -> DEAD.
+
+    HEALTHY replicas are routable.  SUSPECT is the transient stall-
+    timeout state: the replica's worker stopped making progress, the
+    router has asked its engine to abort, and the abort will surface as
+    a failure at the next step boundary — policies already skip it.
+    A failure consumes one restart from `max_replica_restarts`; within
+    budget the replica returns to HEALTHY (engines stay warm, so a
+    restart is just reclaim + re-mark), beyond it the replica is DEAD
+    and never routed to again.  `events` records every transition as
+    (from_state, to_state, reason) for tests and post-mortems."""
+    state: str = "healthy"
+    restarts: int = 0                       # restarts consumed so far
+    failures: List[str] = field(default_factory=list)
+    events: List[tuple] = field(default_factory=list)
 
 
 class RoutePolicy:
@@ -82,7 +156,9 @@ class RoutePolicy:
 
 
 class RoundRobin(RoutePolicy):
-    """Static cyclic assignment, blind to load; never defers."""
+    """Static cyclic assignment, blind to load; never defers while a
+    routable (healthy) replica exists — unhealthy replicas are skipped,
+    keeping the cadence over the survivors."""
 
     name = "round_robin"
 
@@ -90,9 +166,13 @@ class RoundRobin(RoutePolicy):
         self._next = 0
 
     def select(self, router, req):
-        r = self._next % len(router.replicas)
-        self._next += 1
-        return r
+        n = len(router.replicas)
+        for _ in range(n):
+            r = self._next % n
+            self._next += 1
+            if router.routable(r):
+                return r
+        return None                    # every replica unhealthy: defer
 
 
 class LeastQueue(RoutePolicy):
@@ -105,6 +185,8 @@ class LeastQueue(RoutePolicy):
     def select(self, router, req):
         best, best_score = None, None
         for i, eng in enumerate(router.replicas):
+            if not router.routable(i):
+                continue                   # unhealthy: never dispatch into it
             if eng.free_slots() <= eng.queue_depth():
                 continue                   # every free lane already spoken for
             score = eng.queue_depth() + eng.busy_slots()
@@ -126,6 +208,8 @@ class LeastPages(RoutePolicy):
     def select(self, router, req):
         best, best_pages = None, None
         for i, eng in enumerate(router.replicas):
+            if not router.routable(i):
+                continue
             if eng.queue_depth() or not eng.can_admit_request(req):
                 continue
             pages = eng.free_pages()
@@ -150,7 +234,8 @@ def get_policy(name: Union[str, RoutePolicy]) -> RoutePolicy:
                      f"expected one of {POLICIES}")
 
 
-@owned_by("router", "queue", "dispatch_log", "steps")
+@owned_by("router", "queue", "dispatch_log", "steps", "health", "failed",
+          "fail_log")
 class Router:
     """Front-end over N independent `ServingEngine` replicas.
 
@@ -174,6 +259,13 @@ class Router:
     device (`jax.local_devices()[r % n]`) so replica steps overlap on
     real hardware instead of queueing on one device.
 
+    `fault_tolerance` (None | True | dict | FaultToleranceConfig) opts
+    into per-replica health tracking (healthy/suspect/dead), restart
+    budgets, deterministic failover (reclaimed requests replay from
+    their prompts on survivors — bitwise identical at temperature 0),
+    per-request deadlines, and bounded retries; `None` (default) keeps
+    the historical fail-fast contract.  See docs/fault_tolerance.md.
+
     Drive it exactly like an engine:
 
         router = Router(cfg, params, dsg, n_replicas=4,
@@ -187,7 +279,7 @@ class Router:
                  policy: Union[str, RoutePolicy] = "least_queue",
                  param_views: Optional[Sequence] = None, seed: int = 0,
                  exec_mode: str = "sequential", mesh=None,
-                 **engine_kw):
+                 fault_tolerance=None, **engine_kw):
         if n_replicas < 1:
             raise ValueError("router needs at least one replica")
         if hasattr(engine_kw.get("cache_backend"), "make"):
@@ -229,13 +321,27 @@ class Router:
         self.queue: collections.deque = collections.deque()
         self.dispatch_log: List[tuple] = []     # (uid, replica index)
         self.steps = 0
+        # fault tolerance (docs/fault_tolerance.md): None keeps the
+        # historical fail-fast behavior — failures re-raise, stalls raise
+        self.ft = as_ft_config(fault_tolerance)
+        self.health = [ReplicaHealth() for _ in range(n_replicas)]
+        self.failed: Dict[int, Request] = {}    # failed/timed_out, by uid
+        self.fail_log: List[tuple] = []         # (uid, status, reason)
+        for r, eng in enumerate(self.engines):
+            eng.replica_index = r               # failure attribution
 
     # -- request flow --------------------------------------------------------
 
     @runs_on("router")
     def submit(self, req: Request):
-        req.submitted = req.submitted or time.time()
+        req.submitted = req.submitted or time.perf_counter()
         self.queue.append(req)
+
+    def routable(self, i: int) -> bool:
+        """Whether policies may dispatch to replica `i`.  Without fault
+        tolerance health is never mutated, so every replica stays
+        routable and policies behave exactly as before."""
+        return self.health[i].state == "healthy"
 
     @runs_on("router")
     def _dispatch(self):
@@ -261,22 +367,163 @@ class Router:
                 f"executor {self.executor.name!r} free-runs replicas from "
                 f"worker threads; drive it with run() or drain(), not "
                 f"step()")
+        self._expire_deadlines()
         self._dispatch()
         active = [i for i, eng in enumerate(self.engines)
                   if self.executor.has_work(eng)]
         if active:
-            self.executor.step_all(active)
+            try:
+                self.executor.step_all(active)
+            except ReplicaFailure as err:
+                # fault tolerance off: re-raise (str(err) carries the
+                # cause message, so callers matching on it still work)
+                if not self._handle_replica_failure(err):
+                    raise
         elif self.queue:
             # every replica is idle yet the policy still defers the head:
             # retirements can never free what it is waiting for (e.g. a
             # paged pool smaller than one request's reservation) — the
             # router analogue of the engine's stalled-admission error
-            raise RuntimeError(
-                f"router stalled: {len(self.queue)} queued request(s) "
-                f"undispatchable by policy {self.policy.name!r} while all "
-                f"replicas are idle; raise cache_tokens or lower "
-                f"max_new/prompt_bucket")
+            if self.ft is not None:
+                self._fail_undispatchable()
+            else:
+                raise RuntimeError(
+                    f"router stalled: {len(self.queue)} queued request(s) "
+                    f"undispatchable by policy {self.policy.name!r} while "
+                    f"all replicas are idle; raise cache_tokens or lower "
+                    f"max_new/prompt_bucket")
         self.steps += 1
+
+    # -- fault tolerance (docs/fault_tolerance.md) ---------------------------
+
+    @runs_on("router")
+    def _transition(self, i: int, state: str, reason: str):
+        h = self.health[i]
+        h.events.append((h.state, state, reason))
+        h.state = state
+
+    @runs_on("router")
+    def _finish_failed(self, req: Request, status: str, reason: str):
+        """Terminal non-ok completion: the request surfaces in done()
+        with an explicit status instead of hanging the drain loop."""
+        req.status = status
+        req.finished = time.perf_counter()
+        self.failed[req.uid] = req
+        self.fail_log.append((req.uid, status, reason))
+
+    @runs_on("router")
+    def _expire_deadlines(self):
+        """Fail out router-queued requests whose deadline passed.  A
+        request already admitted to a lane is never interrupted — it
+        either completes (cheaper than eviction this close to done) or
+        gets its deadline re-checked at reclaim time after a failure."""
+        if self.ft is None:
+            return
+        now = time.perf_counter()
+        expired = [r for r in self.queue
+                   if r.deadline_s is not None
+                   and now - r.submitted > r.deadline_s]
+        for req in expired:
+            self.queue.remove(req)
+            self._finish_failed(req, "timed_out",
+                                f"deadline {req.deadline_s}s expired in "
+                                f"router queue")
+
+    @runs_on("router")
+    def _handle_replica_failure(self, err: ReplicaFailure) -> bool:
+        """Contain one replica failure; False when fault tolerance is
+        off (the caller re-raises)."""
+        if self.ft is None:
+            return False
+        self._on_replica_failure(err.index, err.cause)
+        return True
+
+    @runs_on("router")
+    def _on_replica_failure(self, i: int, cause: BaseException):
+        """The failover sequence: reclaim the failed replica's queued +
+        in-flight requests (pages/lanes freed via ServingEngine.reset),
+        decide the replica's fate against its restart budget, and requeue
+        the reclaimed requests at the FRONT of the router queue (they
+        were dispatched first; FIFO order is preserved).  Each reclaimed
+        request replays FROM ITS PROMPT: the partial output is discarded,
+        so at temperature 0 the re-decoded stream is bit-identical to an
+        uninterrupted run — the paper's determinism property is what
+        makes failover this cheap."""
+        h = self.health[i]
+        h.failures.append(str(cause))
+        reclaimed = self.engines[i].reset()
+        if h.restarts < self.ft.max_replica_restarts:
+            h.restarts += 1
+            self._transition(
+                i, "healthy",
+                f"restarted ({h.restarts}/{self.ft.max_replica_restarts})"
+                f" after: {cause}")
+        else:
+            self._transition(i, "dead",
+                             f"restart budget exhausted after: {cause}")
+        now = time.perf_counter()
+        # reversed so appendleft lands them at the head in reclaim order
+        for req in reversed(reclaimed):
+            req.retries += 1
+            req.output.clear()           # replay from the prompt
+            req.started = 0.0
+            if (req.deadline_s is not None
+                    and now - req.submitted > req.deadline_s):
+                self._finish_failed(req, "timed_out",
+                                    f"deadline {req.deadline_s}s expired "
+                                    f"during failover from replica {i}")
+            elif req.retries > self.ft.max_retries:
+                self._finish_failed(req, "failed",
+                                    f"retry budget exhausted "
+                                    f"({self.ft.max_retries}) after "
+                                    f"replica {i} failed")
+            else:
+                self.queue.appendleft(req)
+
+    @runs_on("router")
+    def _on_replica_stall(self, i: int):
+        """Stall-timeout containment (threaded executor): the worker is
+        stuck inside a step and cannot be killed safely, so mark the
+        replica SUSPECT (policies stop routing to it) and ask its engine
+        to abort — the EngineAborted raise at the next step boundary
+        funnels into the standard failure path.  A worker wedged forever
+        inside a single device call never reaches that boundary; its
+        requests stay lost until process restart (documented limit)."""
+        if self.ft is None or self.health[i].state != "healthy":
+            return
+        timeout = self.ft.stall_timeout_s
+        self._transition(i, "suspect",
+                         f"no step progress for {timeout}s")
+        self.engines[i].abort = True
+
+    @runs_on("router")
+    def _fail_undispatchable(self):
+        """Graceful degradation: every replica is idle yet the policy
+        still defers — retirements can never unblock the head.  With no
+        routable replica left every queued request fails; otherwise only
+        the head does (the next head may be placeable)."""
+        if not any(self.routable(i) for i in range(len(self.engines))):
+            while self.queue:
+                self._finish_failed(self.queue.popleft(), "failed",
+                                    "no routable replica (all dead)")
+        elif self.queue:
+            self._finish_failed(self.queue.popleft(), "failed",
+                                f"undispatchable by policy "
+                                f"{self.policy.name!r} with all replicas "
+                                f"idle")
+
+    @runs_on("router")
+    def reset_health(self):
+        """Revive every replica (benchmark/test repeats after a chaos
+        run): health back to HEALTHY, failure/event/fail logs cleared.
+        Engines keep their compiled callables — reviving is free."""
+        for h in self.health:
+            h.state = "healthy"
+            h.restarts = 0
+            h.failures.clear()
+            h.events.clear()
+        self.failed.clear()
+        self.fail_log.clear()
 
     def _busy(self) -> bool:
         return bool(self.queue) or any(
@@ -304,8 +551,10 @@ class Router:
     def done(self) -> Dict[int, Request]:
         """Merged completed requests across replicas, keyed by uid — the
         replica-count-invariant result surface (uids must be unique
-        across the submitted set)."""
-        out: Dict[int, Request] = {}
+        across the submitted set).  Includes requests the fault-tolerance
+        layer finished with status "failed"/"timed_out": every submitted
+        request surfaces exactly once, check `req.status`."""
+        out: Dict[int, Request] = dict(self.failed)
         for eng in self.engines:
             out.update(eng.done)
         return out
@@ -373,4 +622,6 @@ class Router:
             "queue_depth": eng.queue_depth(),
             "free_slots": eng.free_slots(),
             "free_pages": eng.free_pages(),
+            "health": self.health[i].state,
+            "restarts": self.health[i].restarts,
         } for i, eng in enumerate(self.engines)]

@@ -83,6 +83,19 @@ def live_page_buckets(max_pages: int) -> tuple:
 
 _ADMIT_SALT = 0xADA117   # folds admission PRNG keys off the decode stream
 
+#: Terminal request states.  "ok" is stamped at retirement; "failed" and
+#: "timed_out" are stamped by the Router's fault-tolerance layer
+#: (serving/router.py) — an engine on its own never fails a request.
+REQUEST_STATUSES = ("pending", "ok", "failed", "timed_out")
+
+
+class EngineAborted(RuntimeError):
+    """Raised by an engine whose `abort` flag was set: the stall-timeout
+    containment path (serving/router.py) cannot kill a thread stuck
+    inside a device call, so it asks the engine to abandon its in-flight
+    state at the NEXT step boundary — the raise funnels the replica into
+    the standard failure/reclaim path."""
+
 
 @dataclass
 class Request:
@@ -92,12 +105,16 @@ class Request:
     eos_id: Optional[int] = None
     temperature: float = 0.0         # 0 -> greedy argmax
     top_p: float = 1.0               # nucleus mass kept when sampling
-    # filled by the engine:
+    deadline_s: Optional[float] = None   # max submit->finish wait (router)
+    # filled by the engine (time.perf_counter() stamps — monotonic, for
+    # duration math only; NTP steps would corrupt wall-clock latencies):
     output: List[int] = field(default_factory=list)
     truncated: bool = False          # prompt exceeded the largest bucket
     submitted: float = 0.0
     started: float = 0.0             # admission time (first compute)
     finished: float = 0.0
+    status: str = "pending"          # one of REQUEST_STATUSES
+    retries: int = 0                 # failover re-dispatches consumed
 
 
 @dataclass
@@ -296,6 +313,14 @@ class ServingEngine:
         self._draws = 0               # admission PRNG counter
         self._warned_truncation = False
         self._base_key = jax.random.PRNGKey(seed)
+        # fault-tolerance surface (serving/router.py, runtime/
+        # fault_tolerance.py).  `abort` is a benign cross-thread flag: the
+        # router sets it (stall-timeout containment) and the engine's own
+        # worker observes it at the next step boundary — a plain bool
+        # store/load under the GIL, never read-modify-written.
+        self.replica_index = 0        # set by the Router (attribution)
+        self.fault_injector = None    # ServingFaultInjector (chaos runs)
+        self.abort = False
 
         self.backend = (cache_backend if hasattr(cache_backend, "make")
                         else kv_cache.get_backend(
@@ -389,7 +414,7 @@ class ServingEngine:
         # keep an earlier stamp if one exists: a front-end router stamps
         # submission time at ITS queue, and latency should span the whole
         # wait, not just the slice after dispatch to this replica
-        req.submitted = req.submitted or time.time()
+        req.submitted = req.submitted or time.perf_counter()
         self.queue.append(req)
 
     @runs_on("worker")
@@ -467,7 +492,23 @@ class ServingEngine:
         for i, slot in enumerate(self.slots):
             if not slot.free or not self.queue:
                 continue
-            req = self.queue[0]
+            # deadline enforcement at the admission boundary: a request
+            # whose deadline lapsed while queued retires as timed_out
+            # instead of occupying a lane (the router also expires its
+            # own queue — this covers push policies that dispatch
+            # eagerly, and bare engines; see docs/fault_tolerance.md)
+            while self.queue:
+                req = self.queue[0]
+                if (req.deadline_s is None
+                        or time.perf_counter() - req.submitted
+                        <= req.deadline_s):
+                    break
+                self.queue.popleft()
+                req.status = "timed_out"
+                req.finished = time.perf_counter()
+                self.done[req.uid] = req
+            if not self.queue:
+                break
             plen = len(req.prompt)
             pb = self._bucket_for(plen)
             if plen > pb:
@@ -507,7 +548,7 @@ class ServingEngine:
                                       np.float32(req.top_p))
             else:
                 tok = jnp.argmax(logits)
-            req.started = time.time()
+            req.started = time.perf_counter()
             slot.req = req
             slot.pos = pb
             self._next_tok[i] = int(tok)
@@ -575,6 +616,18 @@ class ServingEngine:
         never be admitted).  Callers must follow a non-None plan with
         the jitted decode dispatch and `commit_step()` — `step()` is
         that composition; replica executors batch the middle."""
+        if self.abort:
+            # cleared here (not left sticky) so a restarted replica does
+            # not immediately re-abort; ServingEngine.reset() also clears
+            self.abort = False
+            raise EngineAborted(
+                f"replica {self.replica_index} aborted at step boundary "
+                f"(stall-timeout containment)")
+        if self.fault_injector is not None:
+            # chaos harness hook: kill raises here (before this step's
+            # tokens land), delay sleeps inside the step, poison corrupts
+            # resident outputs then raises — see runtime/fault_tolerance
+            self.fault_injector.on_step(self)
         self._admit()
         active = [i for i, s in enumerate(self.slots) if not s.free]
         if not active:
@@ -638,7 +691,8 @@ class ServingEngine:
             hit_eos = r.eos_id is not None and r.output[-1] == r.eos_id
             if hit_eos or len(r.output) >= r.max_new \
                     or slot.pos >= self.max_seq:
-                r.finished = time.time()
+                r.status = "ok"
+                r.finished = time.perf_counter()
                 self.done[r.uid] = r
                 slot.req = None
                 slot.pos = 0
@@ -708,6 +762,71 @@ class ServingEngine:
                     self.dsg_rt.reset_lane(i)
             if scores is not None:
                 self.dsg_rt.update_from_scores(np.asarray(scores), due)
+
+    # -- fault containment (called by serving/router.py failover) ------------
+    #
+    # These run under the "worker" role like every other engine mutation.
+    # During failover the replica's own worker is gone (it raised and
+    # exited, or never existed under the lockstep executors), so the
+    # router thread is momentarily the engine's driver — the threaded
+    # executor serializes that handoff under its condition lock and, with
+    # REPRO_TSAN=1, re-resolves the role to quiescent before the router
+    # touches the engine.
+
+    @runs_on("worker")
+    def evict_slot(self, i: int) -> Optional[Request]:
+        """Release lane `i` mid-flight and return its request (None when
+        the lane is free): the lane's pages return to the backend pool
+        and its DSG pattern resets, exactly as retirement would, but the
+        request does NOT land in `done`.  The partial output is kept —
+        the caller decides between replay (the router's failover clears
+        it so re-decode from the prompt is bit-identical at temperature
+        0) and surfacing the partial stream."""
+        slot = self.slots[i]
+        req = slot.req
+        if req is None:
+            return None
+        slot.req = None
+        slot.pos = 0
+        self.cache = self.backend.free(self.cache, i)
+        if self.dsg_rt is not None:
+            self.dsg_rt.reset_lane(i)
+        return req
+
+    @runs_on("worker")
+    def evict_request(self, uid: int) -> Optional[Request]:
+        """Evict request `uid` wherever it sits — a resident lane (freed
+        via evict_slot) or the admission queue.  Returns the request, or
+        None when it is not on this engine (already retired or never
+        dispatched here)."""
+        for i, slot in enumerate(self.slots):
+            if slot.req is not None and slot.req.uid == uid:
+                return self.evict_slot(i)
+        for req in self.queue:
+            if req.uid == uid:
+                self.queue.remove(req)
+                return req
+        return None
+
+    @runs_on("worker")
+    def reset(self) -> List[Request]:
+        """Reclaim every queued + resident request and return them in
+        admission order (resident lanes by slot index — they were
+        admitted first — then the queue FIFO).  `done` is preserved:
+        requests that retired before the failure completed correctly.
+        The engine itself stays warm (compiled callables, cache pool,
+        PRNG base key) — this IS the replica restart path; a restarted
+        replica serves its next request with no recompilation."""
+        reclaimed = []
+        for i in range(self.n_slots):
+            req = self.evict_slot(i)
+            if req is not None:
+                reclaimed.append(req)
+        reclaimed.extend(self.queue)
+        self.queue.clear()
+        self._next_tok[:] = 0
+        self.abort = False
+        return reclaimed
 
     # -- stats ---------------------------------------------------------------
 

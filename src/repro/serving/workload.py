@@ -13,6 +13,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.runtime.fault_tolerance import ServingFaultInjector
 from repro.serving.router import Router
 from repro.serving.scheduler import Request, ServingEngine
 
@@ -124,6 +125,7 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
                  cache_tokens=None, seed: int = 0, replicas: int = 1,
                  route_policy: str = "least_queue",
                  exec_mode: str = "sequential", dsg_serving=None,
+                 fault_tolerance=None, faults=None,
                  max_steps: int = 100_000) -> Dict[str, float]:
     """Run the request list through one engine (replicas=1, the historical
     path) or a Router over `replicas` engines; returns throughput/latency
@@ -140,29 +142,47 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
     data-parallel wall clock (slowest replica's busy time) under the
     sequential executor, MEASURED wall clock under the parallel ones
     (`makespan_measured` records which) — and `parallel_tok_per_s`
-    (tokens / makespan) to the stats."""
+    (tokens / makespan) to the stats.
+
+    Fault tolerance (docs/fault_tolerance.md): `fault_tolerance` (None |
+    True | dict | FaultToleranceConfig) opts the Router into failure
+    containment; `faults` (a ReplicaFault list or a ServingFaultInjector,
+    runtime/fault_tolerance.py) injects deterministic chaos — attached
+    AFTER warmup so step-keyed faults never fire inside the compile
+    pass.  Injecting faults auto-enables default fault tolerance (an
+    uncontained kill would just crash the run) and forces the Router
+    path.  Chaos runs add failed/timed_out/replica_health stats."""
     engine_kw = dict(n_slots=n_slots, max_seq=max_seq,
                      prompt_bucket=prompt_bucket, admission=admission,
                      cache_backend=cache_backend, page_size=page_size,
                      cache_tokens=cache_tokens, dsg_serving=dsg_serving)
+    if faults is not None and fault_tolerance is None:
+        fault_tolerance = True
     warm_temp = max((r.temperature for r in requests), default=0.0)
-    if replicas == 1 and exec_mode == "sequential":
+    if (replicas == 1 and exec_mode == "sequential"
+            and fault_tolerance is None):
         eng = ServingEngine(cfg, params, dsg, seed=seed, **engine_kw)
         warmup_engine(eng, cfg.vocab, warm_temp, max_steps=max_steps)
         runner, stepper = eng, eng
     else:
         runner = Router(cfg, params, dsg, n_replicas=replicas,
                         policy=route_policy, exec_mode=exec_mode,
-                        seed=seed, **engine_kw)
+                        seed=seed, fault_tolerance=fault_tolerance,
+                        **engine_kw)
         warmup_router(runner, cfg.vocab, warm_temp, max_steps=max_steps)
         stepper = None
 
+    injector = None
+    if faults is not None:
+        injector = (faults if hasattr(faults, "on_step")
+                    else ServingFaultInjector(faults))
+        injector.attach(runner.engines)
     for r in requests:
         runner.submit(r)
     try:
-        t0 = time.time()
+        t0 = time.perf_counter()
         done = runner.run(max_steps=max_steps)
-        wall = time.time() - t0
+        wall = time.perf_counter() - t0
     finally:
         if stepper is None:
             # release executor worker threads even when the run raises
@@ -214,4 +234,17 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
                                              1e-9),
             "per_replica": runner.replica_stats(),
         })
+        if runner.ft is not None:
+            stats.update({
+                "completed_ok": sum(r.status == "ok"
+                                    for r in done.values()),
+                "failed": sum(r.status == "failed"
+                              for r in done.values()),
+                "timed_out": sum(r.status == "timed_out"
+                                 for r in done.values()),
+                "retries": sum(r.retries for r in done.values()),
+                "replica_health": [h.state for h in runner.health],
+                "faults_fired": (len(injector.log)
+                                 if injector is not None else 0),
+            })
     return stats

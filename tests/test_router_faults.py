@@ -1,0 +1,382 @@
+"""Fault-tolerant serving: health state machine, deterministic failover,
+deadlines/retry budgets, and the eviction path (ISSUE 8).
+
+The paper's determinism property is the load-bearing wall here: greedy
+decode under per-row DRS selection is bit-identical to a solo run
+regardless of lane or co-residents (pinned since PR 1), so a request
+replayed from its prompt on a healthy replica after its replica died
+must produce the SAME stream — every failover test below pins merged
+streams bitwise against an undisturbed single-engine reference.
+"""
+import numpy as np
+import pytest
+
+from harness import (assert_streams_equal, engine_spec, make_engine_parts,
+                     mixed_traffic, run_and_collect)
+from repro.runtime.fault_tolerance import (InjectedFault, ReplicaFault,
+                                           ServingFaultInjector)
+from repro.serving.router import (FaultToleranceConfig, Router,
+                                  as_ft_config)
+from repro.serving.scheduler import EngineAborted, Request, ServingEngine
+from repro.serving.workload import run_workload, warmup_router
+
+
+@pytest.fixture(scope="module")
+def parts():
+    return make_engine_parts()
+
+
+@pytest.fixture(scope="module")
+def ref_streams(parts):
+    """Undisturbed single-engine reference streams for mixed_traffic."""
+    cfg, params, dsg = parts
+    return run_and_collect(engine_spec(cfg, params, dsg),
+                           mixed_traffic(cfg))
+
+
+def _router(parts, **kw):
+    cfg, params, dsg = parts
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("prompt_bucket", 32)
+    return Router(cfg, params, dsg, **kw)
+
+
+def _streams(done):
+    return {u: list(r.output) for u, r in done.items()}
+
+
+# -- failover determinism ----------------------------------------------------
+
+@pytest.mark.parametrize("exec_mode", ["sequential", "threaded"])
+def test_kill_failover_streams_bitwise_equal(parts, ref_streams,
+                                             exec_mode):
+    """Replica 1 killed mid-decode, zero restarts: it stays DEAD, its
+    requests replay on survivors, and the merged streams are bitwise
+    equal to the healthy run."""
+    cfg = parts[0]
+    inj = ServingFaultInjector([ReplicaFault(replica=1, step=3)])
+    router = _router(parts, n_replicas=3, policy="round_robin",
+                     exec_mode=exec_mode,
+                     fault_tolerance=FaultToleranceConfig(
+                         max_replica_restarts=0, max_retries=3))
+    inj.attach(router.engines)
+    for r in mixed_traffic(cfg):
+        router.submit(r)
+    try:
+        done = router.run(max_steps=8000)
+    finally:
+        router.close()
+    assert inj.log == [{"replica": 1, "step": 3, "kind": "kill"}]
+    assert router.health[1].state == "dead"
+    assert all(r.status == "ok" for r in done.values())
+    assert any(r.retries > 0 for r in done.values())
+    assert_streams_equal(ref_streams, _streams(done), exec_mode)
+
+
+def test_poison_failover_discards_partial_output(parts, ref_streams):
+    """A poison fault corrupts the victim lanes' last emitted token
+    before raising — bitwise stream equality therefore proves failover
+    replays from the prompt instead of resuming the tainted partial."""
+    cfg = parts[0]
+    inj = ServingFaultInjector(
+        [ReplicaFault(replica=1, step=3, kind="poison")])
+    router = _router(parts, n_replicas=3, policy="round_robin",
+                     fault_tolerance=True)
+    inj.attach(router.engines)
+    for r in mixed_traffic(cfg):
+        router.submit(r)
+    done = router.run(max_steps=8000)
+    assert router.health[1].restarts == 1     # default budget: restarted
+    assert router.health[1].state == "healthy"
+    assert_streams_equal(ref_streams, _streams(done), "poison")
+
+
+def test_restarted_replica_serves_again(parts, ref_streams):
+    """Within the restart budget the replica returns to HEALTHY and the
+    policy routes to it again."""
+    cfg = parts[0]
+    inj = ServingFaultInjector([ReplicaFault(replica=0, step=2)])
+    router = _router(parts, n_replicas=2, policy="round_robin",
+                     fault_tolerance=FaultToleranceConfig(
+                         max_replica_restarts=1))
+    inj.attach(router.engines)
+    for r in mixed_traffic(cfg):
+        router.submit(r)
+    done = router.run(max_steps=8000)
+    assert router.health[0].state == "healthy"
+    assert router.health[0].restarts == 1
+    assert [ev[:2] for ev in router.health[0].events] == [
+        ("healthy", "healthy")]            # restart logs a transition
+    assert_streams_equal(ref_streams, _streams(done), "restart")
+
+
+def test_threaded_stall_timeout_contains_straggler(parts, ref_streams):
+    """A delayed worker (injected 0.9s sleep) trips stall_timeout_s:
+    SUSPECT -> abort at the next step boundary -> restart, with streams
+    still bitwise equal.  Healthy replicas are never falsely suspected
+    (the idle->busy progress stamp)."""
+    cfg = parts[0]
+    inj = ServingFaultInjector(
+        [ReplicaFault(replica=1, step=2, kind="delay", delay_s=0.9)])
+    router = _router(parts, n_replicas=2, policy="round_robin",
+                     exec_mode="threaded",
+                     fault_tolerance=FaultToleranceConfig(
+                         max_replica_restarts=1, stall_timeout_s=0.2))
+    warmup_router(router, cfg.vocab)     # no compiles inside the window
+    inj.attach(router.engines)
+    for r in mixed_traffic(cfg):
+        router.submit(r)
+    try:
+        done = router.run(max_steps=16000)
+    finally:
+        router.close()
+    assert [h.restarts for h in router.health] == [0, 1]
+    states = [ev[1] for ev in router.health[1].events]
+    assert states == ["suspect", "healthy"]
+    assert_streams_equal(ref_streams, _streams(done), "stall")
+
+
+# -- graceful degradation ----------------------------------------------------
+
+def test_all_replicas_dead_fails_requests_without_hanging(parts):
+    cfg = parts[0]
+    inj = ServingFaultInjector([ReplicaFault(replica=0, step=1),
+                                ReplicaFault(replica=1, step=1)])
+    router = _router(parts, n_replicas=2, policy="least_queue",
+                     fault_tolerance=FaultToleranceConfig(
+                         max_replica_restarts=0))
+    inj.attach(router.engines)
+    reqs = mixed_traffic(cfg)
+    for r in reqs:
+        router.submit(r)
+    done = router.run(max_steps=400)       # returns — does not hang
+    assert set(done) == {r.uid for r in reqs}
+    assert all(h.state == "dead" for h in router.health)
+    assert any(r.status == "failed" for r in done.values())
+    assert all(r.status in ("ok", "failed") for r in done.values())
+    assert all(r.finished > 0 for r in done.values())
+
+
+@pytest.mark.parametrize("exec_mode", ["sequential", "threaded"])
+def test_deadline_expiry_surfaces_timed_out(parts, exec_mode):
+    """A queued request whose deadline passes while a long request holds
+    the only lane finishes with status timed_out instead of hanging
+    drain() — the acceptance-criteria case."""
+    cfg, params, dsg = parts
+    router = _router(parts, n_replicas=1, policy="least_pages", n_slots=1,
+                     exec_mode=exec_mode, fault_tolerance=True)
+    rng = np.random.default_rng(3)
+    long_req = Request(uid=0, prompt=rng.integers(0, cfg.vocab, 8,
+                                                  dtype=np.int32),
+                       max_new=30)
+    late = Request(uid=1, prompt=rng.integers(0, cfg.vocab, 8,
+                                              dtype=np.int32),
+                   max_new=4, deadline_s=1e-4)
+    router.submit(long_req)
+    router.submit(late)
+    try:
+        done = router.drain(max_steps=4000)
+    finally:
+        router.close()
+    assert done[0].status == "ok" and len(done[0].output) == 30
+    assert done[1].status == "timed_out" and done[1].output == []
+    assert ("timed_out" in status for _, status, _ in router.fail_log)
+
+
+def test_retry_budget_exhaustion_fails_request(parts):
+    """A request that can never be admitted (reservation larger than the
+    paged pool) keeps crashing its replica; once retries exceed
+    max_retries it fails explicitly instead of looping forever."""
+    cfg, params, dsg = parts
+    router = _router(parts, n_replicas=1, policy="round_robin",
+                     cache_backend="paged", page_size=8, cache_tokens=16,
+                     fault_tolerance=FaultToleranceConfig(
+                         max_replica_restarts=5, max_retries=1))
+    rng = np.random.default_rng(5)
+    router.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, 24,
+                                                     dtype=np.int32),
+                          max_new=30))
+    done = router.run(max_steps=400)
+    assert done[0].status == "failed"
+    assert done[0].retries == 2            # initial + 1 retry, then fail
+    assert router.health[0].state == "healthy"   # restarts not exhausted
+
+
+def test_fault_tolerance_off_keeps_fail_fast(parts):
+    """Without opting in, an engine stall still raises (the historical
+    contract) and str() carries the original message."""
+    cfg, params, dsg = parts
+    router = _router(parts, n_replicas=1, policy="round_robin",
+                     cache_backend="paged", page_size=8, cache_tokens=16)
+    rng = np.random.default_rng(5)
+    router.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, 24,
+                                                     dtype=np.int32),
+                          max_new=30))
+    with pytest.raises(RuntimeError, match="engine stalled"):
+        router.run(max_steps=400)
+
+
+# -- health machine + policies ----------------------------------------------
+
+def test_policies_skip_unhealthy_replicas(parts):
+    router = _router(parts, n_replicas=3, policy="round_robin",
+                     fault_tolerance=True)
+    router._transition(1, "dead", "test")
+    req = mixed_traffic(parts[0], n=1)[0]
+    assert not router.routable(1)
+    picks = [router.policy.select(router, req) for _ in range(4)]
+    assert picks == [0, 2, 0, 2]           # cadence over the survivors
+    router._transition(0, "suspect", "test")
+    assert router.policy.select(router, req) == 2
+    router._transition(2, "dead", "test")
+    assert router.policy.select(router, req) is None
+
+
+def test_ft_config_validation():
+    assert as_ft_config(None) is None
+    assert as_ft_config(True) == FaultToleranceConfig()
+    assert as_ft_config({"max_retries": 5}).max_retries == 5
+    cfg = FaultToleranceConfig(max_replica_restarts=3)
+    assert as_ft_config(cfg) is cfg
+    with pytest.raises(ValueError):
+        as_ft_config("yes")
+    with pytest.raises(ValueError):
+        FaultToleranceConfig(max_replica_restarts=-1)
+    with pytest.raises(ValueError):
+        FaultToleranceConfig(max_retries=-1)
+    with pytest.raises(ValueError):
+        FaultToleranceConfig(stall_timeout_s=0.0)
+
+
+def test_reset_health_revives_replicas(parts):
+    inj = ServingFaultInjector([ReplicaFault(replica=0, step=1)])
+    router = _router(parts, n_replicas=2, policy="least_queue",
+                     fault_tolerance=FaultToleranceConfig(
+                         max_replica_restarts=0))
+    inj.attach(router.engines)
+    for r in mixed_traffic(parts[0]):
+        router.submit(r)
+    router.run(max_steps=400)
+    assert router.health[0].state == "dead"
+    router.reset_health()
+    assert all(h.state == "healthy" and h.restarts == 0
+               for h in router.health)
+    assert not router.failed and not router.fail_log
+    # revived: serves a fresh batch end to end
+    inj.reset()
+    inj.detach(router.engines)
+    for r in mixed_traffic(parts[0], seed=31):
+        router.submit(r)
+    done = router.run(max_steps=400)
+    assert all(r.status == "ok" for r in done.values())
+
+
+# -- engine eviction path ----------------------------------------------------
+
+def test_evict_request_releases_pages(parts):
+    cfg, params, dsg = parts
+    eng = ServingEngine(cfg, params, dsg, n_slots=2, max_seq=64,
+                        prompt_bucket=32, cache_backend="paged",
+                        page_size=8, cache_tokens=128)
+    pages0 = eng.free_pages()
+    rng = np.random.default_rng(7)
+    req = Request(uid=0, prompt=rng.integers(0, cfg.vocab, 8,
+                                             dtype=np.int32), max_new=20)
+    eng.submit(req)
+    eng.step()
+    assert eng.free_pages() < pages0       # reservation held
+    assert eng.evict_request(0) is req
+    assert eng.free_pages() == pages0      # reservation fully returned
+    assert eng.free_slots() == eng.n_slots
+    assert eng.evict_request(0) is None    # already gone
+    assert 0 not in eng.done               # evicted, not retired
+
+
+def test_engine_reset_reclaims_in_admission_order(parts):
+    cfg, params, dsg = parts
+    eng = ServingEngine(cfg, params, dsg, n_slots=2, max_seq=64,
+                        prompt_bucket=32)
+    rng = np.random.default_rng(9)
+    reqs = [Request(uid=u, prompt=rng.integers(0, cfg.vocab, 8,
+                                               dtype=np.int32),
+                    max_new=20) for u in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                             # admits 2, queues 1
+    assert eng.busy_slots() == 2 and eng.queue_depth() == 1
+    eng.done[99] = Request(uid=99, prompt=np.zeros(1, np.int32))
+    reclaimed = eng.reset()
+    assert [r.uid for r in reclaimed] == [0, 1, 2]
+    assert eng.queue_depth() == 0 and eng.free_slots() == 2
+    assert 99 in eng.done                  # done preserved across reset
+
+
+def test_engine_abort_raises_at_step_boundary(parts):
+    cfg, params, dsg = parts
+    eng = ServingEngine(cfg, params, dsg, n_slots=2, max_seq=64,
+                        prompt_bucket=32)
+    rng = np.random.default_rng(11)
+    eng.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, 8,
+                                                  dtype=np.int32),
+                       max_new=6))
+    eng.step()
+    eng.abort = True
+    with pytest.raises(EngineAborted):
+        eng.step()
+    assert not eng.abort                   # cleared by the raise
+    eng.step()                             # next boundary proceeds
+
+
+def test_injector_fires_each_fault_exactly_once(parts):
+    cfg, params, dsg = parts
+    eng = ServingEngine(cfg, params, dsg, n_slots=2, max_seq=64,
+                        prompt_bucket=32)
+    inj = ServingFaultInjector([ReplicaFault(replica=0, step=0)])
+    inj.attach([eng])
+    rng = np.random.default_rng(13)
+    eng.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, 8,
+                                                  dtype=np.int32),
+                       max_new=4))
+    with pytest.raises(InjectedFault):
+        eng.step()
+    done = eng.run(max_steps=100)          # same steps: never re-fires
+    assert done[0].status == "ok"
+    assert len(inj.log) == 1
+
+
+# -- shutdown ----------------------------------------------------------------
+
+def test_threaded_close_idempotent_and_restartable(parts):
+    cfg = parts[0]
+    router = _router(parts, n_replicas=2, policy="least_queue",
+                     exec_mode="threaded")
+    for r in mixed_traffic(cfg):
+        router.submit(r)
+    done = router.run(max_steps=8000)
+    assert len(done) == 6
+    router.close()
+    router.close()                         # second close: clean no-op
+    for r in mixed_traffic(cfg, seed=41):
+        router.submit(r)
+    done2 = router.run(max_steps=8000)     # workers restaff after close
+    assert len(done2) == 6
+    router.close()
+
+
+# -- workload integration ----------------------------------------------------
+
+def test_run_workload_chaos_stats(parts):
+    """run_workload(faults=...) auto-enables fault tolerance, forces the
+    Router path, and reports the chaos counters."""
+    cfg, params, dsg = parts
+    reqs = mixed_traffic(cfg)
+    stats = run_workload(
+        cfg, params, dsg, reqs, n_slots=2, max_seq=64, prompt_bucket=32,
+        replicas=2, route_policy="round_robin",
+        faults=[ReplicaFault(replica=1, step=2)])
+    assert stats["faults_fired"] == 1
+    assert stats["completed_ok"] == len(reqs)
+    assert stats["failed"] == 0 and stats["timed_out"] == 0
+    assert stats["retries"] > 0
+    assert stats["replica_health"] == ["healthy", "healthy"]

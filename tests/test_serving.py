@@ -258,7 +258,7 @@ def test_throughput_ignores_pre_run_queue_wait(engine_parts):
     eng.submit(Request(uid=0, prompt=rng.integers(0, cfg.vocab, 8,
                                                   dtype=np.int32),
                        max_new=5))
-    eng.queue[0].submitted = time.time() - 1_000.0   # stale queue wait
+    eng.queue[0].submitted = time.perf_counter() - 1_000.0  # stale wait
     done = eng.run(max_steps=100)
     toks = sum(len(r.output) for r in done.values())
     # the old submit->finish span would cap throughput at toks/1000
