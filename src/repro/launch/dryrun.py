@@ -203,16 +203,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["reason"] = ("pure full-attention arch: long_500k requires "
                          "sub-quadratic attention (DESIGN.md §4)")
         return rec
-    t0 = time.time()
+    t0 = time.perf_counter()
     cfg, fn, args, in_sh, out_sh, donate, batch_ok = build_cell(
         arch, shape_name, mesh, dsg_on, remat, overrides)
     with pctx.use_mesh(mesh, batch_shardable=batch_ok):
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                          donate_argnums=donate)
         lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
     mem = compiled.memory_analysis()
     if mem is not None:
         rec["memory"] = {
@@ -221,6 +221,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                       "temp_size_in_bytes", "generated_code_size_in_bytes",
                       "alias_size_in_bytes")}
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per device
+        cost = cost[0] if cost else {}
     rec["cost_xla"] = {k: float(v) for k, v in cost.items()
                       if isinstance(v, (int, float)) and k in
                       ("flops", "bytes accessed", "transcendentals",

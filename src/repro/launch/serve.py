@@ -118,6 +118,15 @@ def main():
     ap.add_argument("--prompt-bucket", type=int, default=256)
     ap.add_argument("--admission", choices=("overlap", "wave"),
                     default="overlap")
+    ap.add_argument("--decode-chunk", type=int, default=1,
+                    help="decode steps fused into one device dispatch "
+                         "(scheduler.make_chunked_decode_fns): EOS / "
+                         "budget freezing stays on device and the host "
+                         "syncs once per chunk instead of per token; "
+                         "temperature-0 streams are bitwise-identical "
+                         "to --decode-chunk 1 "
+                         "(benchmarks/bench_decode_loop.py gates the "
+                         "speedup)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="data-parallel serving replicas behind the "
                          "front-end router (serving/router.py)")
@@ -251,8 +260,11 @@ def main():
                              exec_mode=args.exec_mode,
                              dsg_serving=dsg_serving,
                              fault_tolerance=ft, faults=faults,
+                             decode_chunk=args.decode_chunk,
                              seed=args.seed)
         tag = f"{stats['admission']}/{stats['cache_backend']}"
+        if stats["decode_chunk"] > 1:
+            tag += f"/chunk{stats['decode_chunk']}"
         if "route_policy" in stats:
             tag += (f"/{stats['replicas']}x {stats['route_policy']}"
                     f"/{stats['exec_mode']}")
@@ -282,9 +294,9 @@ def main():
     prompts = jnp.asarray(rng.integers(0, cfg.vocab,
                                        (args.batch, args.prompt_len),
                                        dtype=np.int32))
-    t0 = time.time()
+    t0 = time.perf_counter()
     toks = generate(cfg, params, dsg, prompts, args.gen)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s); "
           f"first row: {np.asarray(toks[0])[:8]}")

@@ -150,14 +150,14 @@ def main():
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
     mesh = make_production_mesh() if args.production_mesh else None
-    t0 = time.time()
+    t0 = time.perf_counter()
     _, history, monitor = train(cfg, mesh=mesh, steps=args.steps,
                                 ckpt_dir=args.ckpt_dir,
                                 grad_compress=args.grad_compress,
                                 global_batch=args.batch, seq_len=args.seq)
     losses = [h["loss"] for h in history]
     print(f"steps={len(history)} first_loss={losses[0]:.4f} "
-          f"last_loss={losses[-1]:.4f} wall={time.time()-t0:.1f}s "
+          f"last_loss={losses[-1]:.4f} wall={time.perf_counter()-t0:.1f}s "
           f"stragglers={len(monitor.flagged)}")
 
 

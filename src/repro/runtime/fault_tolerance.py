@@ -86,7 +86,12 @@ class InjectedFault(RuntimeError):
 @dataclass(frozen=True)
 class ReplicaFault:
     """One deterministic serving fault: when replica `replica`'s engine
-    reaches step `step`, do `kind` —
+    reaches step `step`, do `kind`.  "Reaches" means the first step
+    boundary whose counter is AT OR PAST `step`: with a fused decode
+    chunk (ServingEngine decode_chunk > 1) the counter advances by up to
+    a whole chunk per boundary, so an exact-match key landing mid-chunk
+    would never fire — the fault instead lands on the next chunk
+    boundary, which is also the only place the engine can contain it.
 
       kill   — raise InjectedFault at the step boundary, before the
                step's tokens land (the clean worker-death case);
@@ -146,8 +151,11 @@ class ServingFaultInjector:
 
     def on_step(self, eng) -> None:
         for k, f in enumerate(self.faults):
+            # >= (not ==): a chunked engine's counter jumps by up to
+            # decode_chunk per boundary, so a mid-chunk key fires at the
+            # first boundary past it instead of being skipped forever
             if (k in self._fired or f.replica != eng.replica_index
-                    or f.step != eng.steps):
+                    or eng.steps < f.step):
                 continue
             self._fired.add(k)
             self.log.append({"replica": f.replica, "step": f.step,

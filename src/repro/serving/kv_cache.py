@@ -165,6 +165,18 @@ class _Backend:
     def resident_bytes(self, handle: CacheHandle) -> int:
         return sum(leaf.nbytes for leaf in jax.tree.leaves(handle.data))
 
+    def ensure_range(self, handle: CacheHandle, slot: int, start: int,
+                     stop: int) -> CacheHandle:
+        """Grow lane `slot` to cover writes at every position in
+        [start, stop) — the fused decode chunk's pre-reservation, where
+        `ensure` moves ahead of the device loop because the scanned
+        micro-steps cannot grow the page table mid-dispatch.  The caller
+        clamps `stop` to the lane's emit budget so the mapping stays
+        inside its admission-time page reservation."""
+        for pos in range(start, stop):
+            handle = self.ensure(handle, slot, pos)
+        return handle
+
 
 def dense_merge(cache: dict, lane_cache: dict, slot) -> dict:
     """Scatter a 1-lane dense cache into lane `slot` of the batched cache.
@@ -322,6 +334,24 @@ class PagedBackend(_Backend):
         (pg,) = self.allocator.alloc(1)
         self._table[slot, lp] = pg
         self._resv[slot] = max(int(self._resv[slot]) - 1, 0)
+        return CacheHandle({**handle.data,
+                            "page_table": jnp.asarray(self._table)},
+                           "paged", self.page_size)
+
+    def ensure_range(self, handle: CacheHandle, slot: int, start: int,
+                     stop: int) -> CacheHandle:
+        """Map every page covering writes in [start, stop), pushing the
+        device page table once instead of once per newly-mapped page."""
+        grew = False
+        for lp in range(start // self.page_size,
+                        (stop - 1) // self.page_size + 1):
+            if self._table[slot, lp] == NULL_PAGE:
+                (pg,) = self.allocator.alloc(1)
+                self._table[slot, lp] = pg
+                self._resv[slot] = max(int(self._resv[slot]) - 1, 0)
+                grew = True
+        if not grew:
+            return handle
         return CacheHandle({**handle.data,
                             "page_table": jnp.asarray(self._table)},
                            "paged", self.page_size)

@@ -569,7 +569,13 @@ class ShardedExecutor(ReplicaExecutor):
             from repro.parallel.sharding import replica_stack_spec
             self._sharding = NamedSharding(mesh, replica_stack_spec())
         e0 = self.engines[0]
-        greedy, sample = sched.make_decode_fns(e0.cfg)
+        if any(e.decode_chunk != e0.decode_chunk for e in self.engines):
+            raise ValueError(
+                "sharded executor needs a homogeneous decode_chunk "
+                "across replicas (the group step is one compiled "
+                "variant): got "
+                f"{[e.decode_chunk for e in self.engines]}")
+        self.chunk = e0.decode_chunk
         shared_p = all(e.params is e0.params for e in self.engines)
         shared_d = all(e.dsg is e0.dsg for e in self.engines)
         p_ax = None if shared_p else 0
@@ -584,13 +590,28 @@ class ShardedExecutor(ReplicaExecutor):
                         else jax.tree_util.tree_map(
                             lambda *ls: self._stack(list(ls)),
                             *[e.dsg for e in self.engines]))
-        self._jit_greedy = jax.jit(
-            jax.vmap(greedy, in_axes=(p_ax, d_ax, 0, 0, 0, 0, 0, None)),
-            donate_argnums=(3,), static_argnums=(7,))
-        self._jit_sample = jax.jit(
-            jax.vmap(sample,
-                     in_axes=(p_ax, d_ax, 0, 0, 0, 0, 0, None, 0, 0, 0, 0)),
-            donate_argnums=(3,), static_argnums=(7,))
+        if self.chunk > 1:
+            # fused-chunk group step: the chunked bodies vmapped over the
+            # replica axis, one dispatch per (chunk x replicas) tick
+            cg, cs = sched.make_chunked_decode_fns(e0.cfg, self.chunk,
+                                                   e0.max_seq)
+            self._jit_greedy = jax.jit(
+                jax.vmap(cg, in_axes=(p_ax, d_ax, 0, 0, 0, 0, 0, 0, None)),
+                donate_argnums=(3,), static_argnums=(8,))
+            self._jit_sample = jax.jit(
+                jax.vmap(cs, in_axes=(p_ax, d_ax, 0, 0, 0, 0, 0, 0, None,
+                                      0, 0, 0, 0)),
+                donate_argnums=(3,), static_argnums=(8,))
+        else:
+            greedy, sample = sched.make_decode_fns(e0.cfg)
+            self._jit_greedy = jax.jit(
+                jax.vmap(greedy, in_axes=(p_ax, d_ax, 0, 0, 0, 0, 0, None)),
+                donate_argnums=(3,), static_argnums=(7,))
+            self._jit_sample = jax.jit(
+                jax.vmap(sample,
+                         in_axes=(p_ax, d_ax, 0, 0, 0, 0, 0, None,
+                                  0, 0, 0, 0)),
+                donate_argnums=(3,), static_argnums=(7,))
         # begin-phase failures deferred past the group step (one raise
         # per tick keeps sibling replicas consistent; see step_all)
         self._pending_failures: List[ReplicaFailure] = []
@@ -611,7 +632,9 @@ class ShardedExecutor(ReplicaExecutor):
             tok=np.zeros(n, np.int32), pos=np.zeros(n, np.int32),
             free_mask=np.ones(n, np.bool_),
             temps=np.zeros(n, np.float32), top_ps=np.ones(n, np.float32),
-            live_pages=0, sample=False)
+            live_pages=0, sample=False, chunk=eng.decode_chunk,
+            eos_ids=np.full(n, -1, np.int32),
+            emit_left=np.ones(n, np.int32))
 
     def _group_step(self, plans, live: int, sample: bool):
         """One vmapped decode over the full group's stacked operands;
@@ -639,6 +662,34 @@ class ShardedExecutor(ReplicaExecutor):
                                         free, donor, live)
         nxt_host = np.array(nxt, np.int32)       # one device sync per tick
         return nxt_host, out, time.perf_counter() - t0
+
+    def _group_chunk_step(self, plans, live: int, sample: bool):
+        """Fused-chunk analogue of _group_step: one vmapped dispatch runs
+        `chunk` scanned micro-steps for every replica.  Returns host
+        (blk, flags, next_tok) stacks, the output caches, and the wall."""
+        engines = self.engines
+        t0 = time.perf_counter()
+        tok = self._stack([jnp.asarray(p.tok) for p in plans])
+        pos = self._stack([jnp.asarray(p.pos) for p in plans])
+        done = np.stack([p.free_mask for p in plans])
+        left = np.stack([p.emit_left for p in plans])
+        eos = np.stack([p.eos_ids for p in plans])
+        caches = jax.tree_util.tree_map(
+            lambda *ls: self._stack(list(ls)), *[e.cache for e in engines])
+        params, dsg = self._params_in, self._dsg_in
+        if sample:
+            keys = self._stack([e._base_key for e in engines])
+            steps = self._stack([jnp.int32(e.steps) for e in engines])
+            temps = np.stack([p.temps for p in plans])
+            top_ps = np.stack([p.top_ps for p in plans])
+            blk, flags, nxt, out = self._jit_sample(
+                params, dsg, tok, caches, pos, done, left, eos, live,
+                keys, steps, temps, top_ps)
+        else:
+            blk, flags, nxt, out = self._jit_greedy(
+                params, dsg, tok, caches, pos, done, left, eos, live)
+        return (np.asarray(blk), np.asarray(flags),
+                np.array(nxt, np.int32), out, time.perf_counter() - t0)
 
     def step_all(self, indices):
         t0 = time.perf_counter()
@@ -669,7 +720,11 @@ class ShardedExecutor(ReplicaExecutor):
             return
         live = max(p.live_pages for p in plans)
         sample = any(p.sample for p in plans)
-        nxt_host, out, _ = self._group_step(plans, live, sample)
+        if self.chunk > 1:
+            blk, flags, nxt_host, out, _ = self._group_chunk_step(
+                plans, live, sample)
+        else:
+            nxt_host, out, _ = self._group_step(plans, live, sample)
         wall = time.perf_counter() - t0
         share = wall / len(real)
         for i, plan in enumerate(plans):
@@ -682,7 +737,11 @@ class ShardedExecutor(ReplicaExecutor):
                 # dispatch; busy_seconds gets the full wall (the replica
                 # was co-busy for all of it) — makespan uses
                 # wall_seconds either way
-                self.engines[i].commit_step(plan, nxt_host[i], share)
+                if self.chunk > 1:
+                    self.engines[i].commit_chunk(plan, blk[i], flags[i],
+                                                 nxt_host[i], share)
+                else:
+                    self.engines[i].commit_step(plan, nxt_host[i], share)
                 self.busy_seconds[i] += wall
         self.wall_seconds += wall
         if failures:
@@ -704,7 +763,11 @@ class ShardedExecutor(ReplicaExecutor):
         plans = [self._dummy_plan(e) for e in self.engines]
         for live in buckets:
             for do_sample in ({False, sample}):
-                nxt, out, _ = self._group_step(plans, live, do_sample)
+                if self.chunk > 1:
+                    *_, out, _ = self._group_chunk_step(plans, live,
+                                                        do_sample)
+                else:
+                    nxt, out, _ = self._group_step(plans, live, do_sample)
                 for i in range(len(self.engines)):
                     self.engines[i].cache = jax.tree_util.tree_map(
                         lambda x: x[i], out)

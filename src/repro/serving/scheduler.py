@@ -150,6 +150,14 @@ class StepPlan:
     top_ps: np.ndarray                # (n_slots,) float32
     live_pages: int                   # static paged walk bound (0 = dense)
     sample: bool                      # any lane with temperature > 0
+    # fused-chunk dispatch (decode_chunk > 1): `chunk` micro-steps run in
+    # one device dispatch, with per-lane EOS / emit-budget freezing on
+    # device, so begin_step emits nothing and commit_chunk lags a full
+    # chunk behind.  eos_ids uses -1 for "no stop token".
+    chunk: int = 1
+    eos_ids: Optional[np.ndarray] = None   # (n_slots,) int32
+    emit_left: Optional[np.ndarray] = None  # (n_slots,) int32 budget
+    refresh: bool = False             # DSG: collect scores at last micro-step
 
 
 def _restore_table(data, c):
@@ -238,6 +246,146 @@ def make_dsg_decode_fns(cfg):
     return _dsg_greedy, _dsg_sample
 
 
+def make_chunked_decode_fns(cfg, chunk: int, max_seq: int):
+    """Build the (greedy, sample) FUSED decode-chunk callables: `chunk`
+    decode steps scanned inside one jitted dispatch, so the per-token
+    host sync (the dispatch-bound wall BENCH_paged_decode.json measures)
+    is paid once per chunk instead of once per token.
+
+    The scan carry keeps (tok, pos, done, emit_left, cache) on device.
+    Per micro-step, lanes whose done bit is set (initially the free
+    lanes; later any lane that hit EOS / its max_new budget / max_seq)
+    mirror the first live lane exactly like the chunk=1 donor path —
+    `jnp.argmin(done)` re-picks the donor every micro-step because the
+    chunk=1 donor (first active lane) can itself finish mid-chunk.  A
+    frozen lane's writes are donor duplicates (paged) or overwritten at
+    readmission (dense), identical to the chunk=1 free-lane contract.
+
+    Outputs: `blk` (chunk, n_slots) int32 — the token each lane emitted
+    at each micro-step (its decode INPUT, matching begin_step's
+    emit-before-decode order at chunk=1) — and `flags` (chunk, n_slots)
+    bool marking which entries are real.  A lane's flag column is a
+    monotone prefix: done never unsets, so the host takes `blk[:n, i]`.
+    The final carry's tok is the lane's pending next-step token.
+
+    The sample variant folds the key schedule as (seed, step0 + k,
+    lane) — bitwise the per-step schedule, so a sampled lane's stream
+    is invariant to the chunk size AS LONG AS its admission step and
+    `_draws` count match (chunked scheduling admits at chunk boundaries,
+    which shifts admission timing under load; temperature-0 streams are
+    unconditionally chunk-invariant).
+    """
+    def _make(sample):
+        def fn(p, d, tok, c, pos, done, emit_left, eos_ids, live_pages,
+               *extra):
+            if sample:
+                key, step0, temps, top_ps = extra
+
+            def body(carry, k):
+                tok, pos, done, left, c = carry
+                donor = jnp.argmin(done)      # first live lane (False < True)
+                tok_in = jnp.where(done, tok[donor], tok)
+                pos_in = jnp.where(done, pos[donor], pos)
+                view = kv_cache.decode_view(c, done, donor)
+                logits, data = api.decode_step(p, d, cfg, tok_in[:, None],
+                                               view, pos_in,
+                                               live_pages=live_pages)
+                if sample:
+                    keys = jax.random.split(jax.random.fold_in(key, k),
+                                            tok.shape[0])
+                    nxt = sample_tokens(logits, keys, temps, top_ps)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                live = ~done
+                fin = live & (((eos_ids >= 0) & (tok_in == eos_ids))
+                              | (left <= 1) | (pos_in + 1 >= max_seq))
+                c = CacheHandle(_restore_table(data, c), c.kind,
+                                c.page_size)
+                carry = (jnp.where(live, nxt, tok),
+                         jnp.where(live, pos_in + 1, pos),
+                         done | fin,
+                         jnp.where(live, left - 1, left), c)
+                return carry, (tok, live)
+
+            xs = (step0 + jnp.arange(chunk)) if sample else None
+            carry0 = (tok, pos, done, emit_left, c)
+            (tok_f, _, _, _, c_f), (blk, flags) = jax.lax.scan(
+                body, carry0, xs, length=chunk)
+            return blk, flags, tok_f, c_f
+        return fn
+
+    return _make(False), _make(True)
+
+
+def make_chunked_dsg_decode_fns(cfg, chunk: int, max_seq: int):
+    """DSG variants of make_chunked_decode_fns: the CSR pattern operand
+    is CONSTANT across the chunk (the engine enforces refresh_interval %
+    chunk == 0, and lanes admit at chunk boundaries, so a refresh-due
+    point can only land on the LAST micro-step — the same token index at
+    which the chunk=1 cadence fires).  The last micro-step runs outside
+    the scan with the python-static `refresh` flag so it can return that
+    step's DRS group scores for the host-side pattern rewrite."""
+    from repro.serving.dsg_runtime import mirror_csr
+
+    def _make(sample):
+        def fn(p, d, tok, c, pos, done, emit_left, eos_ids, live_pages,
+               csr, *extra):
+            if sample:
+                key, step0, temps, top_ps, refresh = extra
+            else:
+                (refresh,) = extra
+
+            def micro(carry, k, collect):
+                tok, pos, done, left, c = carry
+                donor = jnp.argmin(done)
+                tok_in = jnp.where(done, tok[donor], tok)
+                pos_in = jnp.where(done, pos[donor], pos)
+                view = kv_cache.decode_view(c, done, donor)
+                csr_m = mirror_csr(csr, done, donor)
+                out = api.decode_step(p, d, cfg, tok_in[:, None], view,
+                                      pos_in, live_pages=live_pages,
+                                      ffn_csr=csr_m,
+                                      collect_drs_scores=collect)
+                if collect:
+                    logits, data, scores = out
+                else:
+                    (logits, data), scores = out, None
+                if sample:
+                    keys = jax.random.split(jax.random.fold_in(key, k),
+                                            tok.shape[0])
+                    nxt = sample_tokens(logits, keys, temps, top_ps)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                live = ~done
+                fin = live & (((eos_ids >= 0) & (tok_in == eos_ids))
+                              | (left <= 1) | (pos_in + 1 >= max_seq))
+                c = CacheHandle(_restore_table(data, c), c.kind,
+                                c.page_size)
+                carry = (jnp.where(live, nxt, tok),
+                         jnp.where(live, pos_in + 1, pos),
+                         done | fin,
+                         jnp.where(live, left - 1, left), c)
+                return carry, (tok, live), scores
+
+            def body(carry, k):
+                carry, ys, _ = micro(carry, k, False)
+                return carry, ys
+
+            xs = (step0 + jnp.arange(chunk - 1)) if sample else None
+            carry = (tok, pos, done, emit_left, c)
+            carry, (blk, flags) = jax.lax.scan(body, carry, xs,
+                                               length=chunk - 1)
+            k_last = (step0 + chunk - 1) if sample else 0
+            carry, (tok_l, live_l), scores = micro(carry, k_last, refresh)
+            blk = jnp.concatenate([blk, tok_l[None]], axis=0)
+            flags = jnp.concatenate([flags, live_l[None]], axis=0)
+            tok_f, _, _, _, c_f = carry
+            return blk, flags, tok_f, c_f, scores
+        return fn
+
+    return _make(False), _make(True)
+
+
 def sample_tokens(logits: jax.Array, keys: jax.Array, temps: jax.Array,
                   top_ps: jax.Array) -> jax.Array:
     """Per-lane temperature + nucleus sampling, jit-friendly.
@@ -289,9 +437,13 @@ class ServingEngine:
                  admission: str = "overlap",
                  cache_backend: Union[str, object] = "dense",
                  page_size: int = 16, cache_tokens: Optional[int] = None,
-                 seed: int = 0, dsg_serving=None):
+                 seed: int = 0, dsg_serving=None, decode_chunk: int = 1):
         if admission not in ("overlap", "wave"):
             raise ValueError(f"unknown admission policy {admission!r}")
+        if decode_chunk < 1:
+            raise ValueError(
+                f"decode_chunk must be >= 1 (got {decode_chunk})")
+        self.decode_chunk = decode_chunk
         self.cfg = cfg
         self.params = params
         self.dsg = dsg
@@ -366,6 +518,16 @@ class ServingEngine:
         self._jit_decode_sample = jax.jit(_decode_sample,
                                           donate_argnums=(3,),
                                           static_argnums=(7,))
+        # fused decode chunk (ROADMAP: device-resident decode loop) —
+        # decode_chunk micro-steps scanned per dispatch; only built when
+        # chunking is on, and then the chunk=1 decode jits above are
+        # never dispatched (warm_decode warms whichever set is live)
+        if decode_chunk > 1:
+            _cg, _cs = make_chunked_decode_fns(cfg, decode_chunk, max_seq)
+            self._jit_chunk_greedy = jax.jit(_cg, donate_argnums=(3,),
+                                             static_argnums=(8,))
+            self._jit_chunk_sample = jax.jit(_cs, donate_argnums=(3,),
+                                             static_argnums=(8,))
 
         # DSG serving runtime (serving/dsg_runtime.py): per-lane group-CSR
         # patterns feed a sparse FFN decode; refresh scores ride back out
@@ -386,6 +548,13 @@ class ServingEngine:
                     "the on-device refresh (kernels/drs_search.drs_scores) "
                     f"computes relu_sum scores; cfg.dsg.score is "
                     f"{cfg.dsg.score!r}")
+            if decode_chunk > 1 and scfg.refresh_interval % decode_chunk:
+                raise ValueError(
+                    f"decode_chunk ({decode_chunk}) must divide the DSG "
+                    f"refresh_interval ({scfg.refresh_interval}): refresh "
+                    "cadence is per-lane emitted-token count, and a due "
+                    "point landing mid-chunk could not rewrite the CSR "
+                    "pattern the chunk already dispatched with")
             self.dsg_rt = dsg_runtime.DSGRuntime(cfg, scfg, n_slots)
 
             def _prefill_dsg(p, d, toks, lane0):
@@ -402,6 +571,13 @@ class ServingEngine:
             self._jit_decode_sample_dsg = jax.jit(_dsg_sample,
                                                   donate_argnums=(3,),
                                                   static_argnums=(7, 13))
+            if decode_chunk > 1:
+                _dcg, _dcs = make_chunked_dsg_decode_fns(
+                    cfg, decode_chunk, max_seq)
+                self._jit_chunk_greedy_dsg = jax.jit(
+                    _dcg, donate_argnums=(3,), static_argnums=(8, 10))
+                self._jit_chunk_sample_dsg = jax.jit(
+                    _dcs, donate_argnums=(3,), static_argnums=(8, 14))
 
     # -- public API ---------------------------------------------------------
 
@@ -553,15 +729,19 @@ class ServingEngine:
             slot.pos = pb
             self._next_tok[i] = int(tok)
 
-    def _live_pages(self, pos: np.ndarray) -> int:
+    def _live_pages(self, pos: np.ndarray, span: int = 1) -> int:
         """Static page-walk bound for this step's paged decode
         (live_page_bound over the DEEPEST lane; free lanes mirror an
         active donor, so the active max covers them).  The attention
         executor reads only these pages — the whole point of the paged
-        layout (ROADMAP: read only live pages)."""
+        layout (ROADMAP: read only live pages).  `span` widens the bound
+        to cover a fused chunk's deepest write (pos + span - 1); reads
+        past a lane's depth are masked, so a wider bound only changes
+        which pow2 compile variant runs, never the gathered values."""
         if self.cache.kind != "paged":
             return 0
-        return live_page_bound(int(pos.max()), self.cache.page_size,
+        deepest = min(int(pos.max()) + span - 1, self.max_seq - 1)
+        return live_page_bound(deepest, self.cache.page_size,
                                self.max_seq // self.cache.page_size)
 
     @runs_on("worker")
@@ -583,6 +763,42 @@ class ServingEngine:
         free_mask = np.ones(self.n_slots, np.bool_)
         temps = np.full(self.n_slots, 0.5, np.float32)
         top_ps = np.ones(self.n_slots, np.float32)
+        if self.decode_chunk > 1:
+            # a chunked engine only ever dispatches the fused variants —
+            # warm those instead.  All-done lanes mirror lane 0 exactly
+            # like the chunk=1 warm (writes land in the scratch page /
+            # overwritten lane bytes), and emit nothing.
+            tok1 = jnp.zeros(self.n_slots, jnp.int32)
+            done = jnp.ones(self.n_slots, bool)
+            left = jnp.ones(self.n_slots, jnp.int32)
+            eos = jnp.full(self.n_slots, -1, jnp.int32)
+            for live in buckets:
+                if self.dsg_rt is not None:
+                    for bnd in self.dsg_rt.warm_bounds():
+                        csr = self.dsg_rt.device_csr(bnd)
+                        for refresh in (False, True):
+                            _, _, _, self.cache, _ = \
+                                self._jit_chunk_greedy_dsg(
+                                    self.params, self.dsg, tok1,
+                                    self.cache, pos, done, left, eos,
+                                    live, csr, refresh)
+                            if sample:
+                                _, _, _, self.cache, _ = \
+                                    self._jit_chunk_sample_dsg(
+                                        self.params, self.dsg, tok1,
+                                        self.cache, pos, done, left, eos,
+                                        live, csr, self._base_key, 0,
+                                        temps, top_ps, refresh)
+                    continue
+                _, _, _, self.cache = self._jit_chunk_greedy(
+                    self.params, self.dsg, tok1, self.cache, pos, done,
+                    left, eos, live)
+                if sample:
+                    _, _, _, self.cache = self._jit_chunk_sample(
+                        self.params, self.dsg, tok1, self.cache, pos,
+                        done, left, eos, live, self._base_key, 0, temps,
+                        top_ps)
+            return
         for live in buckets:
             if self.dsg_rt is not None:
                 # (bound x refresh) variants of the DSG decode step; the
@@ -652,24 +868,64 @@ class ServingEngine:
         free_mask = np.zeros(self.n_slots, np.bool_)
         temps = np.zeros(self.n_slots, np.float32)
         top_ps = np.ones(self.n_slots, np.float32)
+        C = self.decode_chunk
+        eos_ids = np.full(self.n_slots, -1, np.int32)
+        emit_left = np.ones(self.n_slots, np.int32)
         for i, s in enumerate(self.slots):
             if s.free:
                 free_mask[i] = True
                 tok[i] = self._next_tok[donor]
                 pos[i] = self.slots[donor].pos
-            else:
+            elif C == 1:
                 pos[i] = s.pos
                 temps[i] = s.req.temperature
                 top_ps[i] = s.req.top_p
                 # page-table growth for this step's write position (no-op
                 # for the dense backend or when the page is already mapped)
                 self.cache = self.backend.ensure(self.cache, i, s.pos)
-        for i in active:
-            self.slots[i].req.output.append(int(tok[i]))
+            else:
+                pos[i] = s.pos
+                temps[i] = s.req.temperature
+                top_ps[i] = s.req.top_p
+                r = s.req
+                eos_ids[i] = -1 if r.eos_id is None else r.eos_id
+                emit_left[i] = r.max_new - len(r.output)
+                # the fused chunk cannot grow the page table mid-scan, so
+                # `ensure` moves ahead of the loop: pre-map every page the
+                # lane can write this chunk.  Clamping to the lane's own
+                # emit budget / max_seq headroom keeps the mapping inside
+                # its admission-time reservation (ensure stays infallible)
+                w = min(C, int(emit_left[i]), self.max_seq - s.pos)
+                self.cache = self.backend.ensure_range(self.cache, i,
+                                                       s.pos, s.pos + w)
+        if C == 1:
+            for i in active:
+                self.slots[i].req.output.append(int(tok[i]))
+            return StepPlan(active=active, donor=donor, tok=tok, pos=pos,
+                            free_mask=free_mask, temps=temps, top_ps=top_ps,
+                            live_pages=self._live_pages(pos),
+                            sample=bool((temps > 0).any()))
+        # chunked: emission happens on device; commit_chunk appends.  A
+        # DSG refresh-due point can only land on the last micro-step
+        # (refresh_interval % chunk == 0 and lanes admit at chunk
+        # boundaries) — predict it here so the dispatch picks the
+        # score-collecting compile variant.  Lanes that would freeze on
+        # budget/max_seq before the last micro-step never reach their due
+        # token; an unpredicted EOS freeze just wastes one score read.
+        refresh = False
+        if self.dsg_rt is not None:
+            R = self.dsg_rt.cfg.refresh_interval
+            refresh = any(
+                (len(self.slots[i].req.output) + C) % R == 0
+                and int(emit_left[i]) >= C
+                and self.max_seq - self.slots[i].pos >= C
+                for i in active)
         return StepPlan(active=active, donor=donor, tok=tok, pos=pos,
                         free_mask=free_mask, temps=temps, top_ps=top_ps,
-                        live_pages=self._live_pages(pos),
-                        sample=bool((temps > 0).any()))
+                        live_pages=self._live_pages(pos, C),
+                        sample=bool((temps > 0).any()), chunk=C,
+                        eos_ids=eos_ids, emit_left=emit_left,
+                        refresh=refresh)
 
     @runs_on("worker")
     def commit_step(self, plan: StepPlan, next_tok: np.ndarray,
@@ -697,6 +953,93 @@ class ServingEngine:
                 slot.req = None
                 slot.pos = 0
                 self.cache = self.backend.free(self.cache, i)
+
+    @runs_on("worker")
+    def commit_chunk(self, plan: StepPlan, blk: np.ndarray,
+                     flags: np.ndarray, next_tok: np.ndarray,
+                     seconds: float, *, scores=None, bound=None):
+        """Record a fused decode chunk: append each lane's emitted tokens
+        (a lane's flag column is a monotone prefix — once frozen it emits
+        nothing more), latch pending next-step tokens, advance `steps` by
+        the micro-steps that had a live lane, and retire finished lanes.
+        Host bookkeeping lags a full chunk behind the device; retirement
+        re-derives the freeze conditions from the appended output, which
+        mirrors the device's done logic exactly (EOS == output[-1],
+        len(output) >= max_new, pos >= max_seq)."""
+        rt = self.dsg_rt
+        if rt is not None and bound is not None:
+            # one FLOP-model entry per micro-step, over the lanes still
+            # live at that micro-step — keeps flop_stats comparable to a
+            # chunk=1 run of the same traffic
+            for k in range(flags.shape[0]):
+                live = [i for i in plan.active if flags[k, i]]
+                if live:
+                    rt.record_step(live, bound)
+        emitted = 0
+        for i in plan.active:
+            slot = self.slots[i]
+            n = int(flags[:, i].sum())
+            slot.req.output.extend(int(t) for t in blk[:n, i])
+            slot.pos += n
+            emitted += n
+        self._next_tok = np.array(next_tok, np.int32)
+        self.decode_seconds += seconds
+        self.decode_tokens += emitted
+        self.steps += int(flags.any(axis=1).sum())
+        retired = []
+        for i in plan.active:
+            slot = self.slots[i]
+            r = slot.req
+            hit_eos = r.eos_id is not None and r.output[-1] == r.eos_id
+            if hit_eos or len(r.output) >= r.max_new \
+                    or slot.pos >= self.max_seq:
+                r.status = "ok"
+                r.finished = time.perf_counter()
+                self.done[r.uid] = r
+                slot.req = None
+                slot.pos = 0
+                self.cache = self.backend.free(self.cache, i)
+                retired.append(i)
+        if rt is not None:
+            for i in retired:
+                rt.reset_lane(i)
+            if scores is not None:
+                R = rt.cfg.refresh_interval
+                due = [i for i in plan.active
+                       if self.slots[i].req is not None
+                       and len(self.slots[i].req.output) % R == 0]
+                rt.update_from_scores(np.asarray(scores), due)
+
+    @runs_on("worker")
+    def _dispatch_chunk(self, plan: StepPlan):
+        """Device half of a fused chunk: one jitted dispatch running
+        `plan.chunk` scanned decode micro-steps.  Returns host-side
+        (blk, flags, next_tok) plus (scores, bound) for DSG engines."""
+        args = (self.params, self.dsg, jnp.asarray(plan.tok), self.cache,
+                jnp.asarray(plan.pos), jnp.asarray(plan.free_mask),
+                jnp.asarray(plan.emit_left), jnp.asarray(plan.eos_ids),
+                plan.live_pages)
+        scores = bound = None
+        if self.dsg_rt is not None:
+            rt = self.dsg_rt
+            bound = rt.bound()
+            csr = rt.device_csr(bound)
+            if plan.sample:
+                blk, flags, tok_f, self.cache, scores = \
+                    self._jit_chunk_sample_dsg(
+                        *args, csr, self._base_key, self.steps,
+                        plan.temps, plan.top_ps, plan.refresh)
+            else:
+                blk, flags, tok_f, self.cache, scores = \
+                    self._jit_chunk_greedy_dsg(*args, csr, plan.refresh)
+        elif plan.sample:
+            blk, flags, tok_f, self.cache = self._jit_chunk_sample(
+                *args, self._base_key, self.steps, plan.temps,
+                plan.top_ps)
+        else:
+            blk, flags, tok_f, self.cache = self._jit_chunk_greedy(*args)
+        return (np.asarray(blk), np.asarray(flags),
+                np.array(tok_f, np.int32), scores, bound)
 
     @runs_on("worker")
     def _dispatch_dsg(self, plan: StepPlan):
@@ -733,6 +1076,13 @@ class ServingEngine:
         across engines call the begin/commit halves directly."""
         plan = self.begin_step()
         if plan is None:
+            return
+        if plan.chunk > 1:
+            t0 = time.perf_counter()
+            blk, flags, tok_f, scores, bound = self._dispatch_chunk(plan)
+            self.commit_chunk(plan, blk, flags, tok_f,
+                              time.perf_counter() - t0, scores=scores,
+                              bound=bound)
             return
         t0 = time.perf_counter()
         scores = due = None

@@ -61,16 +61,31 @@ def skewed_requests(vocab: int, n_requests: int, *, period: int = 2,
     return reqs
 
 
+def warm_temp_for(requests, warm_temp: float = 0.0) -> float:
+    """The warmup temperature a request list needs: any request with
+    temperature > 0 means the sampling decode/admission variants must be
+    pre-compiled, or the first sampled request to arrive lands a jit
+    compile inside the measured window.  Callers that know their traffic
+    should pass it to warmup_engine/warmup_router via `requests=` (which
+    routes through here) instead of hand-picking warm_temp."""
+    return max((r.temperature for r in requests), default=warm_temp)
+
+
 def warmup_engine(eng: ServingEngine, vocab: int,
-                  warm_temp: float = 0.0, max_steps: int = 100_000):
+                  warm_temp: float = 0.0, max_steps: int = 100_000,
+                  requests=None):
     """Compile every shape a measured window can hit, then reset the
     engine's counters: one throwaway admission per prompt bucket (the
     prefill variants + the decode step), the sampling decode/admission
     variants when the traffic samples (same compiled shapes for any
     temperature > 0), and every static live-page bucket of the decode
-    step (paged engines recompile per pow2 depth bucket — see
+    step — chunked engines warm the fused-chunk variants instead (paged
+    engines recompile per pow2 depth bucket — see
     ServingEngine._live_pages; traffic alone only reaches the buckets
-    its depths happen to cross)."""
+    its depths happen to cross).  Pass the workload's `requests` so the
+    sampling variants are warmed exactly when the traffic needs them."""
+    if requests is not None:
+        warm_temp = warm_temp_for(requests, warm_temp)
     rng = np.random.default_rng(12345)
     for i, b in enumerate(eng.buckets):
         eng.submit(Request(uid=-1 - i,
@@ -90,14 +105,17 @@ def warmup_engine(eng: ServingEngine, vocab: int,
 
 
 def warmup_router(router: Router, vocab: int, warm_temp: float = 0.0,
-                  max_steps: int = 100_000):
+                  max_steps: int = 100_000, requests=None):
     """Warm EVERY replica's prefill buckets and decode live-page variants
     (each replica owns its own jitted callables — nothing is shared), then
     zero the router's timing counters so measured makespans are
     steady-state.  Engines are warmed directly (not through the
     executor), which is safe while no run is in flight; the executor's
     own jitted callables (the sharded group step) are warmed through
-    `executor.warm()`."""
+    `executor.warm()`.  Pass `requests` to derive warm_temp from the
+    actual traffic (see warm_temp_for)."""
+    if requests is not None:
+        warm_temp = warm_temp_for(requests, warm_temp)
     for eng in router.engines:
         warmup_engine(eng, vocab, warm_temp, max_steps=max_steps)
     router.executor.warm(sample=warm_temp > 0)
@@ -105,17 +123,34 @@ def warmup_router(router: Router, vocab: int, warm_temp: float = 0.0,
 
 
 def latency_stats(done: Dict[int, Request]) -> Dict[str, float]:
-    """p50/p95 end-to-end latency (submit -> finish) over finished
-    requests.  Raises ValueError when nothing finished: a silent 0.0
+    """p50/p95 end-to-end latency (submit -> finish) over requests that
+    finished OK.  Failed/timed-out requests are counted separately, NOT
+    folded into the percentiles: a timed-out request's finish stamp is
+    exactly its deadline, so including it reports the SLO ceiling as an
+    observed latency and quietly flattens p95 toward the deadline.
+
+    Raises ValueError when no request finished ok: a silent 0.0
     percentile reads as an impossibly fast pipeline in dashboards —
     same contract as ServingEngine.throughput() (PR 4)."""
     if not done:
         raise ValueError(
             "latency_stats() needs at least one finished request; "
             "drive the engine/router before reading latency percentiles")
-    lat = np.array(sorted(r.finished - r.submitted for r in done.values()))
+    ok = [r for r in done.values() if r.status == "ok"]
+    if not ok:
+        raise ValueError(
+            "latency_stats() needs at least one request with status "
+            f"'ok' (got {len(done)} finished, all failed/timed_out); "
+            "completion latency of a request that never completed is "
+            "not a percentile")
+    lat = np.array(sorted(r.finished - r.submitted for r in ok))
     return {"p50_s": float(np.percentile(lat, 50)),
-            "p95_s": float(np.percentile(lat, 95))}
+            "p95_s": float(np.percentile(lat, 95)),
+            "ok_requests": len(ok),
+            "failed_requests": sum(r.status == "failed"
+                                   for r in done.values()),
+            "timed_out_requests": sum(r.status == "timed_out"
+                                      for r in done.values())}
 
 
 def run_workload(cfg, params, dsg, requests: List[Request], *,
@@ -126,6 +161,7 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
                  route_policy: str = "least_queue",
                  exec_mode: str = "sequential", dsg_serving=None,
                  fault_tolerance=None, faults=None,
+                 decode_chunk: int = 1,
                  max_steps: int = 100_000) -> Dict[str, float]:
     """Run the request list through one engine (replicas=1, the historical
     path) or a Router over `replicas` engines; returns throughput/latency
@@ -155,21 +191,23 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
     engine_kw = dict(n_slots=n_slots, max_seq=max_seq,
                      prompt_bucket=prompt_bucket, admission=admission,
                      cache_backend=cache_backend, page_size=page_size,
-                     cache_tokens=cache_tokens, dsg_serving=dsg_serving)
+                     cache_tokens=cache_tokens, dsg_serving=dsg_serving,
+                     decode_chunk=decode_chunk)
     if faults is not None and fault_tolerance is None:
         fault_tolerance = True
-    warm_temp = max((r.temperature for r in requests), default=0.0)
     if (replicas == 1 and exec_mode == "sequential"
             and fault_tolerance is None):
         eng = ServingEngine(cfg, params, dsg, seed=seed, **engine_kw)
-        warmup_engine(eng, cfg.vocab, warm_temp, max_steps=max_steps)
+        warmup_engine(eng, cfg.vocab, max_steps=max_steps,
+                      requests=requests)
         runner, stepper = eng, eng
     else:
         runner = Router(cfg, params, dsg, n_replicas=replicas,
                         policy=route_policy, exec_mode=exec_mode,
                         seed=seed, fault_tolerance=fault_tolerance,
                         **engine_kw)
-        warmup_router(runner, cfg.vocab, warm_temp, max_steps=max_steps)
+        warmup_router(runner, cfg.vocab, max_steps=max_steps,
+                      requests=requests)
         stepper = None
 
     injector = None
@@ -194,6 +232,7 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
         "admission": admission,
         "cache_backend": cache_backend,
         "replicas": replicas,
+        "decode_chunk": decode_chunk,
         "requests": len(done),
         "tokens": toks,
         "truncated": sum(r.truncated for r in done.values()),

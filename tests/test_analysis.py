@@ -498,7 +498,41 @@ def test_latency_stats_percentiles():
     for uid, lat in enumerate([1.0, 2.0, 3.0, 4.0]):
         r = Request(uid=uid, prompt=np.zeros(4, np.int32))
         r.submitted, r.finished = 10.0, 10.0 + lat
+        r.status = "ok"
         done[uid] = r
     stats = latency_stats(done)
     assert stats["p50_s"] == pytest.approx(2.5)
     assert stats["p95_s"] == pytest.approx(3.85)
+    assert stats["ok_requests"] == 4
+    assert stats["failed_requests"] == 0
+    assert stats["timed_out_requests"] == 0
+
+
+def test_latency_stats_excludes_non_ok():
+    """A timed-out request's finish stamp is exactly its deadline —
+    folding it into p50/p95 reports the SLO ceiling as an observed
+    latency.  Percentiles must cover status == 'ok' only, with non-ok
+    outcomes surfaced as counts."""
+    from repro.serving.scheduler import Request
+    from repro.serving.workload import latency_stats
+    import numpy as np
+    done = {}
+    for uid, (lat, status) in enumerate(
+            [(1.0, "ok"), (2.0, "ok"), (3.0, "ok"), (4.0, "ok"),
+             (60.0, "timed_out"), (45.0, "failed")]):
+        r = Request(uid=uid, prompt=np.zeros(4, np.int32))
+        r.submitted, r.finished = 10.0, 10.0 + lat
+        r.status = status
+        done[uid] = r
+    stats = latency_stats(done)
+    # identical to the all-ok run above: the 60s/45s non-ok latencies
+    # must not move the percentiles
+    assert stats["p50_s"] == pytest.approx(2.5)
+    assert stats["p95_s"] == pytest.approx(3.85)
+    assert stats["ok_requests"] == 4
+    assert stats["failed_requests"] == 1
+    assert stats["timed_out_requests"] == 1
+    # all-non-ok: percentiles are undefined, not 0.0
+    bad = {u: r for u, r in done.items() if r.status != "ok"}
+    with pytest.raises(ValueError, match="status"):
+        latency_stats(bad)

@@ -1,0 +1,213 @@
+"""Fused device-resident decode loop (ISSUE 9): `decode_chunk` micro-
+steps scanned inside ONE jitted dispatch, with per-lane EOS / budget
+freezing on device and host bookkeeping (commit_chunk) lagging a full
+chunk behind.
+
+The contract under test is the same determinism wall every previous PR
+leaned on, extended along a new axis: at temperature 0 the merged
+per-request token streams must be BITWISE-IDENTICAL across
+chunk in {1, 2, 8} x {dense, paged} x {sequential, threaded} executors —
+including EOS landing mid-chunk, retire/readmit across a chunk boundary,
+DSG refresh cadence, and a chaos kill landing between chunks.  What may
+legitimately differ is scheduling (readmission waits for a chunk
+boundary) and therefore per-step lane occupancy — never stream content.
+"""
+import numpy as np
+import pytest
+
+from harness import (assert_streams_equal, engine_spec, make_engine_parts,
+                     mixed_traffic, run_and_collect)
+from repro.runtime.fault_tolerance import ReplicaFault, ServingFaultInjector
+from repro.serving.dsg_runtime import DSGServingConfig
+from repro.serving.parallel_exec import ShardedExecutor
+from repro.serving.router import FaultToleranceConfig, Router
+from repro.serving.scheduler import Request, ServingEngine
+from repro.serving.workload import warmup_router
+
+CHUNKS = (2, 8)
+
+PAGED_KW = dict(cache_backend="paged", page_size=8, cache_tokens=160)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    return make_engine_parts()
+
+
+@pytest.fixture(scope="module")
+def ref_streams(parts):
+    """chunk=1 single-engine reference for the canonical mixed traffic
+    (6 requests over 2 slots — every run retires and readmits lanes,
+    which a chunked engine may only do at chunk boundaries)."""
+    cfg, params, dsg = parts
+    return run_and_collect(engine_spec(cfg, params, dsg),
+                           mixed_traffic(cfg))
+
+
+# -- chunk x backend stream equality (bare engine) ---------------------------
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+@pytest.mark.parametrize("backend_kw", [{}, PAGED_KW],
+                         ids=["dense", "paged"])
+def test_chunked_streams_bitwise_equal(parts, ref_streams, chunk,
+                                       backend_kw):
+    cfg, params, dsg = parts
+    got = run_and_collect(
+        engine_spec(cfg, params, dsg, decode_chunk=chunk, **backend_kw),
+        mixed_traffic(cfg))
+    assert_streams_equal(ref_streams, got, f"chunk={chunk}")
+
+
+def test_chunked_counters_and_paged_pool(parts):
+    """Accounting: a solo request decodes the same number of micro-steps
+    and tokens regardless of chunking (no co-residents, so occupancy is
+    identical), and the paged pool drains back to its idle level — the
+    pre-reserved chunk pages (ensure_range) are clamped to the lane's
+    budget and all returned at retirement."""
+    cfg, params, dsg = parts
+    counts = {}
+    for chunk in (1, 8):
+        req = [Request(uid=0, prompt=np.arange(5, dtype=np.int32) + 3,
+                       max_new=11)]
+        streams, eng = run_and_collect(
+            engine_spec(cfg, params, dsg, decode_chunk=chunk, **PAGED_KW),
+            req, return_engine=True)
+        counts[chunk] = (eng.steps, eng.decode_tokens,
+                         eng.backend.allocator.free_pages,
+                         int(eng.backend._resv.sum()))
+    assert counts[1] == counts[8]
+    assert counts[1][1] == 11          # max_new tokens decoded
+    assert counts[1][3] == 0           # no leaked reservations
+
+
+# -- EOS mid-chunk -----------------------------------------------------------
+
+def test_eos_mid_chunk(parts):
+    """Pick a stop token straight out of the greedy reference streams so
+    generation really does hit EOS, at positions that are NOT chunk
+    boundaries for chunk 8 — the device done-mask must freeze the lane
+    at the right micro-step and the host must retire it from the lagged
+    commit."""
+    cfg, params, dsg = parts
+    base = run_and_collect(engine_spec(cfg, params, dsg),
+                           mixed_traffic(cfg))
+    # a token emitted mid-stream by the longest reference stream
+    uid = max(base, key=lambda u: len(base[u]))
+    eos = base[uid][len(base[uid]) // 2]
+
+    def traffic():
+        reqs = mixed_traffic(cfg)
+        for r in reqs:
+            r.eos_id = eos
+        return reqs
+
+    ref = run_and_collect(engine_spec(cfg, params, dsg), traffic())
+    assert any(r and r[-1] == eos and len(r) < len(base[u])
+               for u, r in ref.items()), "chosen eos never cut a stream"
+    for chunk in CHUNKS:
+        for backend_kw in ({}, PAGED_KW):
+            got = run_and_collect(
+                engine_spec(cfg, params, dsg, decode_chunk=chunk,
+                            **backend_kw),
+                traffic())
+            assert_streams_equal(ref, got, f"eos chunk={chunk}")
+
+
+# -- executors ---------------------------------------------------------------
+
+@pytest.mark.parametrize("exec_mode", ["sequential", "threaded"])
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_chunked_router_executors(parts, ref_streams, chunk, exec_mode):
+    """Chunked engines behind the Router: the sequential and threaded
+    executors drive ServingEngine.step(), so the fused path flows
+    through unchanged — streams stay bitwise equal to the chunk=1
+    single-engine reference across replicas."""
+    cfg, params, dsg = parts
+    got = run_and_collect(
+        engine_spec(cfg, params, dsg, n_replicas=2, exec_mode=exec_mode,
+                    decode_chunk=chunk, **PAGED_KW),
+        mixed_traffic(cfg))
+    assert_streams_equal(ref_streams, got, f"{exec_mode} chunk={chunk}")
+
+
+def test_chunked_sharded_executor(parts, ref_streams):
+    """The sharded executor vmaps the SAME chunked step bodies over the
+    replica axis — one dispatch per (chunk x replicas) tick."""
+    cfg, params, dsg = parts
+    got = run_and_collect(
+        engine_spec(cfg, params, dsg, n_replicas=2, exec_mode="sharded",
+                    decode_chunk=8),
+        mixed_traffic(cfg))
+    assert_streams_equal(ref_streams, got, "sharded chunk=8")
+
+
+def test_sharded_rejects_mixed_chunks(parts):
+    cfg, params, dsg = parts
+    engines = [ServingEngine(cfg, params, dsg, n_slots=2, max_seq=64,
+                             prompt_bucket=32, decode_chunk=c)
+               for c in (1, 8)]
+    with pytest.raises(ValueError, match="homogeneous decode_chunk"):
+        ShardedExecutor(engines)
+
+
+# -- DSG refresh cadence -----------------------------------------------------
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_dsg_refresh_cadence_invariant(parts, chunk):
+    """Per-lane refresh cadence is emitted-token count mod
+    refresh_interval; with chunk | interval and admission pinned to
+    chunk boundaries, a due point can only land on a chunk's LAST
+    micro-step — whose FFN inputs are exactly the ones the chunk=1
+    refresh scores, so patterns and streams match bitwise."""
+    cfg, params, dsg = parts
+    scfg = DSGServingConfig(refresh_interval=8)
+    ref = run_and_collect(engine_spec(cfg, params, dsg, dsg_serving=scfg),
+                          mixed_traffic(cfg))
+    for backend_kw in ({}, PAGED_KW):
+        got = run_and_collect(
+            engine_spec(cfg, params, dsg, dsg_serving=scfg,
+                        decode_chunk=chunk, **backend_kw),
+            mixed_traffic(cfg))
+        assert_streams_equal(ref, got, f"dsg chunk={chunk}")
+
+
+def test_dsg_chunk_must_divide_refresh_interval(parts):
+    cfg, params, dsg = parts
+    with pytest.raises(ValueError, match="refresh_interval"):
+        ServingEngine(cfg, params, dsg, n_slots=2, max_seq=64,
+                      prompt_bucket=32, decode_chunk=3,
+                      dsg_serving=DSGServingConfig(refresh_interval=8))
+
+
+def test_decode_chunk_validation(parts):
+    cfg, params, dsg = parts
+    with pytest.raises(ValueError, match="decode_chunk"):
+        ServingEngine(cfg, params, dsg, n_slots=2, decode_chunk=0)
+
+
+# -- chaos kill between chunks -----------------------------------------------
+
+def test_chaos_kill_lands_on_chunk_boundary(parts, ref_streams):
+    """A kill keyed at step 5 lands mid-chunk for chunk=8; the injector
+    fires it at the FIRST step boundary past it (the >= keying) — the
+    only place a chunked engine can contain a fault — and failover
+    replays the reclaimed requests bitwise."""
+    cfg, params, dsg = parts
+    inj = ServingFaultInjector([ReplicaFault(replica=0, step=5)])
+    router = Router(cfg, params, dsg, n_replicas=2, policy="round_robin",
+                    n_slots=2, max_seq=64, prompt_bucket=32,
+                    decode_chunk=8,
+                    fault_tolerance=FaultToleranceConfig(
+                        max_replica_restarts=1))
+    warmup_router(router, cfg.vocab)
+    inj.attach(router.engines)
+    for r in mixed_traffic(cfg):
+        router.submit(r)
+    done = router.run(max_steps=8000)
+    assert len(inj.log) == 1           # the mid-chunk key still fired
+    # it fired at a chunk boundary: the engine's counter had already
+    # jumped past the keyed step when on_step observed it
+    assert router.health[0].restarts == 1
+    assert_streams_equal(ref_streams,
+                         {u: list(r.output) for u, r in done.items()},
+                         "chaos kill between chunks")
