@@ -2,8 +2,9 @@
 """Validate committed BENCH_*.json artifacts against the shared envelope.
 
 Every gated benchmark (benchmarks/bench_paged_decode.py, bench_router.py,
-bench_router_faults.py, bench_dsg_serving.py) wraps its payload in the
-envelope from benchmarks/common.py:
+bench_router_faults.py, bench_dsg_serving.py, bench_decode_loop.py,
+bench_prefix_sharing.py) wraps its payload in the envelope from
+benchmarks/common.py:
 
   {"name":       str,
    "gates":      [{"description": str, "threshold": num, "value": num,

@@ -150,6 +150,11 @@ def main():
     ap.add_argument("--cache-tokens", type=int, default=None,
                     help="paged pool capacity in tokens "
                          "(default: slots * max-seq, the dense worst case)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="dedupe identical prompt prefixes onto shared "
+                         "refcounted pages with copy-on-write "
+                         "(--cache-backend paged only; "
+                         "docs/cache_backends.md)")
     ap.add_argument("--paged-kernel", choices=("auto", "kernel", "xla"),
                     default="auto",
                     help="paged decode executor: Pallas kernel "
@@ -261,8 +266,11 @@ def main():
                              dsg_serving=dsg_serving,
                              fault_tolerance=ft, faults=faults,
                              decode_chunk=args.decode_chunk,
+                             prefix_sharing=args.prefix_sharing,
                              seed=args.seed)
         tag = f"{stats['admission']}/{stats['cache_backend']}"
+        if stats.get("prefix_sharing"):
+            tag += "/shared"
         if stats["decode_chunk"] > 1:
             tag += f"/chunk{stats['decode_chunk']}"
         if "route_policy" in stats:
@@ -288,6 +296,11 @@ def main():
                   f"out, {stats['retries']} retries, "
                   f"{stats['faults_fired']} fault(s) fired; replica "
                   f"health {stats['replica_health']}")
+        if "shared_page_hits" in stats:
+            print(f"  prefix sharing: {stats['shared_page_hits']} page "
+                  f"hit(s), {stats['cow_copies']} COW cop(ies), "
+                  f"{stats['prefill_cache_hits']} prefill replay(s), "
+                  f"peak {stats['peak_live_pages']} live pages")
         return
 
     rng = np.random.default_rng(0)

@@ -38,11 +38,26 @@ need (`reserve_tokens`, normally `min(prompt_bucket + max_new, max_seq)`)
 and `can_admit` gates on free-minus-reserved, so `ensure` growth never
 fails mid-decode; a pool smaller than one request's reservation surfaces
 as a deferred admission, not silent corruption.
+
+Copy-on-write prefix sharing (PagedBackend(prefix_sharing=True), see
+docs/cache_backends.md): the allocator refcounts pages and keeps a
+prefix-hash index over prompt token blocks (`prefix_chain`), so an
+admission whose padded prompt matches an already-resident prefix maps
+the existing pages (refcount bump, no scatter, no fresh allocation)
+instead of recomputing them.  The only shared page a decode write can
+ever land in is a partial prompt-tail page (growth pages allocated by
+`ensure` are never indexed); writing it while its refcount is > 1
+triggers copy-on-write into a private page, paid for by one extra
+reserved page per admission with a partial tail — so `ensure` stays
+infallible.  `free` is release semantics: decrement, return the page to
+the free list only at refcount zero, and drop its index entries there —
+the index only ever points at live pages.
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -86,11 +101,23 @@ class CacheHandle:
 # ---------------------------------------------------------------------------
 
 class BlockAllocator:
-    """Free-list allocator over physical page ids [reserved, n_pages).
+    """Refcounting free-list allocator over physical page ids
+    [reserved, n_pages).
 
     Page ids below `reserved` are never handed out (id 0 is the paged
     backend's scratch page).  O(1) alloc/free; over-allocation raises
     `OutOfPages`, double-free and foreign ids raise `ValueError`.
+
+    Sharing surface (copy-on-write prefix reuse): `alloc` hands pages
+    out at refcount 1, `share` bumps an already-live page, and `free`
+    has RELEASE semantics — it decrements and only returns a page to
+    the free list at refcount zero, so a fault-path reclaim of a lane
+    holding shared pages decrements, never frees, pages other lanes
+    still read.  `register`/`lookup` maintain the prefix-hash index
+    (content key -> live page); entries drop automatically when their
+    page's refcount hits zero, so the index never points at a freed
+    page.  `peak_live` is the high-water mark of distinct live pages —
+    the resident-page number bench_prefix_sharing.py gates on.
     """
 
     def __init__(self, n_pages: int, reserved: int = 0):
@@ -99,11 +126,28 @@ class BlockAllocator:
         self.n_pages = n_pages
         self.reserved = reserved
         self._free = list(range(n_pages - 1, reserved - 1, -1))
-        self._live: set = set()
+        self._rc: dict = {}                # live page -> refcount (>= 1)
+        self._index: dict = {}             # prefix key -> live page
+        self._page_keys: dict = {}         # live page -> [registered keys]
+        self.peak_live = 0
 
     @property
     def free_pages(self) -> int:
         return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        """Distinct pages currently allocated (refcounts ignored)."""
+        return len(self._rc)
+
+    def reset_peak(self) -> None:
+        """Restart the live-page high-water mark at the current
+        occupancy (benchmarks call this after warmup)."""
+        self.peak_live = len(self._rc)
+
+    def refcount(self, page: int) -> int:
+        """Current refcount (0 for pages not live)."""
+        return self._rc.get(page, 0)
 
     def alloc(self, n: int) -> list:
         if n > len(self._free):
@@ -111,15 +155,58 @@ class BlockAllocator:
                 f"requested {n} pages, only {len(self._free)} free of "
                 f"{self.n_pages - self.reserved}")
         out = [self._free.pop() for _ in range(n)]
-        self._live.update(out)
+        for p in out:
+            self._rc[p] = 1
+        self.peak_live = max(self.peak_live, len(self._rc))
         return out
 
+    def share(self, page: int) -> int:
+        """Add a reference to a live page (a lane mapping an existing
+        shared-prefix page); returns the new refcount."""
+        if page not in self._rc:
+            raise ValueError(f"page {page} is not currently allocated")
+        self._rc[page] += 1
+        return self._rc[page]
+
     def free(self, pages) -> None:
+        """Release one reference per page: the page returns to the free
+        list (and its index entries drop) only when no other holder
+        remains."""
         for p in pages:
-            if p not in self._live:
+            if p not in self._rc:
                 raise ValueError(f"page {p} is not currently allocated")
-            self._live.remove(p)
+            self._rc[p] -= 1
+            if self._rc[p]:
+                continue
+            del self._rc[p]
+            for key in self._page_keys.pop(p, ()):
+                if self._index.get(key) == p:
+                    del self._index[key]
             self._free.append(p)
+
+    # -- prefix-hash index ---------------------------------------------------
+
+    def register(self, key: bytes, page: int) -> None:
+        """Publish a live page under a prefix content key so later
+        admissions with the same prompt blocks can `share` it.  First
+        writer wins: an already-registered key keeps its page (both hold
+        identical content; two entries would just split future sharers)."""
+        if page not in self._rc:
+            raise ValueError(
+                f"cannot register freed page {page} in the prefix index")
+        if key in self._index:
+            return
+        self._index[key] = page
+        self._page_keys.setdefault(page, []).append(key)
+
+    def lookup(self, key: bytes) -> Optional[int]:
+        """The live page registered under `key`, or None.  Entries are
+        dropped at free time, so a hit is always safe to `share`."""
+        return self._index.get(key)
+
+    @property
+    def index_size(self) -> int:
+        return len(self._index)
 
 
 # ---------------------------------------------------------------------------
@@ -211,7 +298,8 @@ class DenseBackend(_Backend):
 
     def write(self, handle: CacheHandle, slot_kv: dict, slot,
               n_tokens: Optional[int] = None,
-              reserve_tokens: Optional[int] = None) -> CacheHandle:
+              reserve_tokens: Optional[int] = None,
+              chain=None) -> CacheHandle:
         return CacheHandle(self._merge(handle.data, slot_kv, slot), "dense", 0)
 
     def ensure(self, handle: CacheHandle, slot: int, pos: int) -> CacheHandle:
@@ -220,13 +308,39 @@ class DenseBackend(_Backend):
     def free(self, handle: CacheHandle, slot: int) -> CacheHandle:
         return handle
 
-    def can_admit(self, n_tokens: int) -> bool:
+    def can_admit(self, n_tokens: int, chain=None,
+                  prompt_tokens: Optional[int] = None) -> bool:
         return True
 
 
 # ---------------------------------------------------------------------------
 # paged backend
 # ---------------------------------------------------------------------------
+
+def prefix_chain(tokens: np.ndarray, page_size: int) -> list:
+    """Chained content keys for each page of a padded prompt row: key i
+    commits to EVERY token in positions [0, min((i+1)*page_size, len)),
+    so two prompts share key i iff their padded rows agree on the whole
+    prefix through page i — exactly the condition under which page i's
+    K/V bytes are identical (page content is a pure function of the
+    tokens at and before it).  keyed blake2b, not python hash():
+    PYTHONHASHSEED salting would break cross-process determinism.
+
+    The engine hashes the BUCKETED row (left-padding included), so only
+    prompts landing in the same bucket with identical padding can share
+    — which is also the only case where their page bytes match.
+    """
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    if toks.ndim != 1:
+        raise ValueError(f"prefix_chain wants a 1-D token row, "
+                         f"got shape {toks.shape}")
+    keys, prev = [], b""
+    for start in range(0, len(toks), page_size):
+        blk = toks[start:start + page_size].tobytes()
+        prev = hashlib.blake2b(prev + blk, digest_size=16).digest()
+        keys.append(prev)
+    return keys
+
 
 def _paged_merge(pools: dict, lane: dict, pp: jax.Array) -> dict:
     """Scatter the leading `len(pp)` pages of a 1-lane dense cache into the
@@ -246,6 +360,34 @@ def _paged_merge(pools: dict, lane: dict, pp: jax.Array) -> dict:
             "pages_v": upd(pools["pages_v"], lane["v"])}
 
 
+def _paged_merge_subset(pools: dict, lane: dict, pp: jax.Array,
+                        lps: jax.Array, n_lp: int) -> dict:
+    """_paged_merge for a shared-prefix admission: scatter only the
+    logical pages `lps` (the NON-shared ones) of the lane's first `n_lp`
+    pages into physical pages `pp` — shared pages already hold identical
+    bytes and must not be rewritten (other lanes read them).  One
+    compile per (n_lp, len(lps)) pair."""
+    ps = pools["pages_k"].shape[2]
+
+    def upd(pool, lane_leaf):
+        l, _, _, kv, d = lane_leaf.shape
+        chunks = lane_leaf[:, 0, :n_lp * ps].reshape(l, n_lp, ps, kv, d)
+        return pool.at[:, pp].set(chunks[:, lps].astype(pool.dtype))
+
+    return {"pages_k": upd(pools["pages_k"], lane["k"]),
+            "pages_v": upd(pools["pages_v"], lane["v"])}
+
+
+def _page_copy(pools: dict, src: jax.Array, dst: jax.Array) -> dict:
+    """Copy one physical page across every layer (the copy half of
+    copy-on-write).  src/dst ride as traced scalars — one compile
+    total, not one per page id."""
+    return {"pages_k": pools["pages_k"].at[:, dst]
+            .set(pools["pages_k"][:, src]),
+            "pages_v": pools["pages_v"].at[:, dst]
+            .set(pools["pages_v"][:, src])}
+
+
 class PagedBackend(_Backend):
     """Fixed-size pages + per-lane page table + host free-list allocator.
 
@@ -260,15 +402,23 @@ class PagedBackend(_Backend):
     kind = "paged"
 
     def __init__(self, page_size: int = 16,
-                 total_tokens: Optional[int] = None):
+                 total_tokens: Optional[int] = None,
+                 prefix_sharing: bool = False):
         if page_size <= 0:
             raise ValueError("page_size must be positive")
         self.page_size = page_size
         self.total_tokens = total_tokens
+        self.prefix_sharing = bool(prefix_sharing)
+        self.cow_copies = 0             # COW events (test/bench counter)
+        self.shared_page_hits = 0       # pages mapped without a scatter
         self.allocator: Optional[BlockAllocator] = None
         self._table: Optional[np.ndarray] = None
         self._resv: Optional[np.ndarray] = None
         self._merge = jax.jit(_paged_merge, donate_argnums=(0,))
+        self._merge_subset = jax.jit(_paged_merge_subset,
+                                     donate_argnums=(0,),
+                                     static_argnums=(4,))
+        self._copy_page = jax.jit(_page_copy, donate_argnums=(0,))
 
     def pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
@@ -296,40 +446,141 @@ class PagedBackend(_Backend):
                 "page_table": jnp.asarray(self._table)}
         return CacheHandle(data, "paged", self.page_size)
 
-    def can_admit(self, n_tokens: int) -> bool:
-        """True when free-minus-reserved pages cover a request reserving
-        `n_tokens`; gating admissions on this makes `ensure` growth
-        infallible for already-admitted lanes."""
-        return (self.allocator.free_pages - int(self._resv.sum())
-                >= self.pages_for(n_tokens))
+    def shared_hits(self, chain: Sequence[bytes]) -> int:
+        """Leading run of chain keys with a live indexed page — the pages
+        an admission with this prompt chain would map instead of
+        allocating.  A chain key can only be resident when every earlier
+        one is (all holders map a contiguous leading prefix), so the scan
+        stops at the first miss."""
+        if not self.prefix_sharing or chain is None:
+            return 0
+        hits = 0
+        for key in chain:
+            if self.allocator.lookup(key) is None:
+                break
+            hits += 1
+        return hits
 
-    def write(self, handle: CacheHandle, slot_kv: dict, slot: int,
+    def sharing_adjustment(self, chain,
+                           prompt_tokens: Optional[int]) -> int:
+        """Worst-case page-count adjustment for a sharing admission:
+        MINUS the full prompt pages already resident (mapped, not
+        allocated), PLUS one COW page when the prompt tail only part-
+        fills its page — the one shared page a decode write can land in.
+        The +1 is charged whether or not the tail is shared YET: the
+        registrant's tail can be shared by a LATER admission, and the
+        registrant then needs the COW page for its own next write."""
+        if not self.prefix_sharing or prompt_tokens is None:
+            return 0
+        tail = 1 if prompt_tokens % self.page_size else 0
+        full = prompt_tokens // self.page_size
+        saved = min(self.shared_hits(chain), full) if chain else 0
+        return tail - saved
+
+    def can_admit(self, n_tokens: int, chain=None,
+                  prompt_tokens: Optional[int] = None) -> bool:
+        """True when free-minus-reserved pages cover a request reserving
+        `n_tokens`; gating admissions on this makes `ensure` growth (and
+        copy-on-write) infallible for already-admitted lanes.  With
+        prefix sharing, `chain`/`prompt_tokens` credit the full prompt
+        pages already resident and charge the partial-tail COW page —
+        the same arithmetic `write` commits to."""
+        need = self.pages_for(n_tokens) \
+            + self.sharing_adjustment(chain, prompt_tokens)
+        return (self.allocator.free_pages - int(self._resv.sum()) >= need)
+
+    def write(self, handle: CacheHandle, slot_kv: Optional[dict], slot: int,
               n_tokens: Optional[int] = None,
-              reserve_tokens: Optional[int] = None) -> CacheHandle:
+              reserve_tokens: Optional[int] = None,
+              chain: Optional[Sequence[bytes]] = None) -> CacheHandle:
         """Splice a prefilled 1-lane dense cache into lane `slot`: allocate
         pages covering the first `n_tokens` positions and scatter the
         lane's K/V into them; `reserve_tokens` (>= n_tokens) additionally
-        reserves growth pages so later `ensure` calls cannot run out."""
+        reserves growth pages so later `ensure` calls cannot run out.
+
+        With prefix sharing, `chain` (one prefix_chain key per prompt
+        page) maps the leading already-resident run by refcount bump —
+        no allocation, no scatter — and registers the freshly written
+        pages for later admissions.  When EVERY prompt page is shared the
+        caller may pass slot_kv=None (the zero-recompute path: no
+        prefill output is needed at all)."""
         if n_tokens is None:
             raise ValueError("paged write needs n_tokens (the prompt extent)")
         self._release(slot)
         n_lp = self.pages_for(n_tokens)
         need = max(self.pages_for(reserve_tokens), n_lp) \
             if reserve_tokens else n_lp
-        pp = self.allocator.alloc(n_lp)
-        self._table[slot, :n_lp] = pp
-        self._resv[slot] = need - n_lp
+        sharing = self.prefix_sharing and chain is not None
+        hits = 0
+        if sharing:
+            if len(chain) != n_lp:
+                raise ValueError(
+                    f"chain must carry one key per prompt page "
+                    f"({n_lp}), got {len(chain)}")
+            hits = self.shared_hits(chain)
+        fresh_lps = list(range(hits, n_lp))
+        # alloc before share: an OutOfPages raise (admission mis-gated)
+        # leaves no dangling refcounts
+        pp = self.allocator.alloc(len(fresh_lps))
+        for i in range(hits):
+            pg = self.allocator.lookup(chain[i])
+            self.allocator.share(pg)
+            self._table[slot, i] = pg
+        self.shared_page_hits += hits
+        for lp, pg in zip(fresh_lps, pp):
+            self._table[slot, lp] = pg
+            if sharing:
+                self.allocator.register(chain[lp], pg)
+        # reservation: growth pages beyond the prompt extent, plus the
+        # partial-tail COW page (see _extra_pages; consumed by _cow)
+        tail = 1 if sharing and n_tokens % self.page_size else 0
+        self._resv[slot] = need - n_lp + tail
         pools = {"pages_k": handle.data["pages_k"],
                  "pages_v": handle.data["pages_v"]}
-        pools = self._merge(pools, slot_kv, jnp.asarray(pp, jnp.int32))
+        if fresh_lps:
+            if slot_kv is None:
+                raise ValueError(
+                    f"write(slot_kv=None) needs every prompt page shared "
+                    f"({hits} of {n_lp} resident)")
+            if hits:
+                pools = self._merge_subset(
+                    pools, slot_kv, jnp.asarray(pp, jnp.int32),
+                    jnp.asarray(fresh_lps, jnp.int32), n_lp)
+            else:
+                pools = self._merge(pools, slot_kv,
+                                    jnp.asarray(pp, jnp.int32))
+        pools["page_table"] = jnp.asarray(self._table)
+        return CacheHandle(pools, "paged", self.page_size)
+
+    def _cow(self, handle: CacheHandle, slot: int, lp: int) -> CacheHandle:
+        """Copy-on-write lane `slot`'s logical page `lp` into a private
+        physical page: the lane is about to write a page other lanes
+        still read.  Copies the page bytes exactly (positions beyond any
+        reader's depth are masked junk either way), releases this lane's
+        reference on the shared page — never freeing it, other holders
+        remain — and spends the lane's reserved COW page."""
+        old = int(self._table[slot, lp])
+        (new,) = self.allocator.alloc(1)
+        self.allocator.free([old])      # rc > 1: decrements, stays live
+        self._table[slot, lp] = new
+        self._resv[slot] = max(int(self._resv[slot]) - 1, 0)
+        self.cow_copies += 1
+        pools = self._copy_page(
+            {"pages_k": handle.data["pages_k"],
+             "pages_v": handle.data["pages_v"]},
+            jnp.int32(old), jnp.int32(new))
         pools["page_table"] = jnp.asarray(self._table)
         return CacheHandle(pools, "paged", self.page_size)
 
     def ensure(self, handle: CacheHandle, slot: int, pos: int) -> CacheHandle:
         """Grow lane `slot` to cover a write at position `pos` (no-op when
-        the covering page is already mapped)."""
+        the covering page is already mapped and privately held; a mapped
+        page still shared with other lanes is copied-on-write first)."""
         lp = pos // self.page_size
-        if self._table[slot, lp] != NULL_PAGE:
+        pg = int(self._table[slot, lp])
+        if pg != NULL_PAGE:
+            if self.prefix_sharing and self.allocator.refcount(pg) > 1:
+                return self._cow(handle, slot, lp)
             return handle
         (pg,) = self.allocator.alloc(1)
         self._table[slot, lp] = pg
@@ -341,15 +592,21 @@ class PagedBackend(_Backend):
     def ensure_range(self, handle: CacheHandle, slot: int, start: int,
                      stop: int) -> CacheHandle:
         """Map every page covering writes in [start, stop), pushing the
-        device page table once instead of once per newly-mapped page."""
+        device page table once instead of once per newly-mapped page.
+        Shared mapped pages in the range are copied-on-write (the fused
+        chunk will write them mid-scan, when the host cannot intervene)."""
         grew = False
         for lp in range(start // self.page_size,
                         (stop - 1) // self.page_size + 1):
-            if self._table[slot, lp] == NULL_PAGE:
-                (pg,) = self.allocator.alloc(1)
-                self._table[slot, lp] = pg
-                self._resv[slot] = max(int(self._resv[slot]) - 1, 0)
-                grew = True
+            pg = int(self._table[slot, lp])
+            if pg != NULL_PAGE:
+                if self.prefix_sharing and self.allocator.refcount(pg) > 1:
+                    handle = self._cow(handle, slot, lp)
+                continue
+            (pg,) = self.allocator.alloc(1)
+            self._table[slot, lp] = pg
+            self._resv[slot] = max(int(self._resv[slot]) - 1, 0)
+            grew = True
         if not grew:
             return handle
         return CacheHandle({**handle.data,
@@ -372,11 +629,16 @@ class PagedBackend(_Backend):
 
 
 def get_backend(name: str, *, page_size: int = 16,
-                total_tokens: Optional[int] = None):
+                total_tokens: Optional[int] = None,
+                prefix_sharing: bool = False):
     """Factory: "dense" -> DenseBackend, "paged" -> PagedBackend."""
     if name == "dense":
+        if prefix_sharing:
+            raise ValueError("prefix_sharing needs the paged backend: "
+                             "the dense layout has no pages to share")
         return DenseBackend()
     if name == "paged":
-        return PagedBackend(page_size=page_size, total_tokens=total_tokens)
+        return PagedBackend(page_size=page_size, total_tokens=total_tokens,
+                            prefix_sharing=prefix_sharing)
     raise ValueError(f"unknown cache backend {name!r}; "
                      f"expected one of {BACKENDS}")

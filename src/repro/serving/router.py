@@ -467,6 +467,7 @@ class Router:
             req.retries += 1
             req.output.clear()           # replay from the prompt
             req.started = 0.0
+            req.first_token = 0.0        # TTFT re-stamps on the survivor
             if (req.deadline_s is not None
                     and now - req.submitted > req.deadline_s):
                 self._finish_failed(req, "timed_out",

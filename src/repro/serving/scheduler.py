@@ -112,6 +112,7 @@ class Request:
     truncated: bool = False          # prompt exceeded the largest bucket
     submitted: float = 0.0
     started: float = 0.0             # admission time (first compute)
+    first_token: float = 0.0         # first output token observed (TTFT)
     finished: float = 0.0
     status: str = "pending"          # one of REQUEST_STATUSES
     retries: int = 0                 # failover re-dispatches consumed
@@ -409,7 +410,7 @@ def sample_tokens(logits: jax.Array, keys: jax.Array, temps: jax.Array,
 
 @owned_by("worker", "queue", "done", "slots", "cache", "steps",
           "decode_seconds", "decode_tokens", "_next_tok", "_draws",
-          "_warned_truncation")
+          "_warned_truncation", "_prefill_cache", "prefill_cache_hits")
 class ServingEngine:
     """Continuous batching over a fixed slot count.
 
@@ -437,7 +438,8 @@ class ServingEngine:
                  admission: str = "overlap",
                  cache_backend: Union[str, object] = "dense",
                  page_size: int = 16, cache_tokens: Optional[int] = None,
-                 seed: int = 0, dsg_serving=None, decode_chunk: int = 1):
+                 seed: int = 0, dsg_serving=None, decode_chunk: int = 1,
+                 prefix_sharing: bool = False):
         if admission not in ("overlap", "wave"):
             raise ValueError(f"unknown admission policy {admission!r}")
         if decode_chunk < 1:
@@ -477,7 +479,28 @@ class ServingEngine:
         self.backend = (cache_backend if hasattr(cache_backend, "make")
                         else kv_cache.get_backend(
                             cache_backend, page_size=page_size,
-                            total_tokens=cache_tokens))
+                            total_tokens=cache_tokens,
+                            prefix_sharing=prefix_sharing))
+        # copy-on-write shared-prefix reuse (docs/cache_backends.md):
+        # admission hashes the bucketed prompt row into a prefix chain,
+        # maps already-resident pages by refcount bump, and — when EVERY
+        # prompt page is shared — replays the cached prefill outputs
+        # instead of recomputing the prompt (zero prefill FLOPs).
+        self.prefix_sharing = bool(prefix_sharing)
+        if self.prefix_sharing and not getattr(self.backend,
+                                               "prefix_sharing", False):
+            raise ValueError(
+                "prefix_sharing=True needs a PagedBackend built with "
+                "prefix_sharing enabled (cache_backend='paged', or pass "
+                "a PagedBackend(prefix_sharing=True) instance)")
+        # LRU of full-prompt prefill outputs keyed by the chain's last
+        # digest: (last-token logits, DRS scores or None).  Bounded so a
+        # long-lived engine's host memory stays flat; entries are tiny
+        # ((vocab,) logits) next to the KV pool.
+        self._prefill_cache: collections.OrderedDict = \
+            collections.OrderedDict()
+        self._prefill_cache_cap = 128
+        self.prefill_cache_hits = 0
         self.cache = self.backend.make(cfg, n_slots, max_seq)
         # zero 1-lane dense template reused by every admission (prefill is
         # functional: the template is never mutated, and its zero tail
@@ -630,21 +653,46 @@ class ServingEngine:
                     - int(self.backend._resv.sum()))
         return self.free_slots() * (self.max_seq // max(self.page_size, 1))
 
+    def _admit_chain(self, req: Request):
+        """(prefix chain, prompt bucket) admission would use for `req` —
+        None chain when sharing is off.  Exposed to the sharing-aware
+        page math below so routing reservations (Router least_pages)
+        see the same expected-sharing credit admission will take."""
+        pb = self._bucket_for(len(req.prompt))
+        if not self.prefix_sharing:
+            return None, pb
+        toks = np.zeros(pb, np.int32)
+        pr = req.prompt[-pb:]
+        toks[pb - len(pr):] = pr
+        return kv_cache.prefix_chain(toks, self.page_size), pb
+
     def pages_needed(self, req: Request) -> int:
         """Worst-case page reservation admitting `req` would take (the
-        same `min(bucket + max_new, max_seq)` extent _admit reserves)."""
-        need = min(self._bucket_for(len(req.prompt)) + req.max_new,
-                   self.max_seq)
+        same `min(bucket + max_new, max_seq)` extent _admit reserves).
+        With prefix sharing the count credits prompt pages already
+        resident (they are mapped, not allocated) and charges the
+        partial-tail COW page — so `least_pages` reservations account
+        for expected sharing."""
+        chain, pb = self._admit_chain(req)
+        need = min(pb + req.max_new, self.max_seq)
         if self.cache.kind == "paged":
-            return self.backend.pages_for(need)
+            pages = self.backend.pages_for(need)
+            if chain is not None:
+                pages += self.backend.sharing_adjustment(chain, pb)
+            return max(pages, 0)
         return -(-need // max(self.page_size, 1))
 
     def can_admit_request(self, req: Request) -> bool:
         """True when `req`, submitted now with an empty queue ahead of it,
         would be admitted by the next step: a lane is free and the cache
-        backend can cover its worst-case reservation."""
-        need = min(self._bucket_for(len(req.prompt)) + req.max_new,
-                   self.max_seq)
+        backend can cover its worst-case reservation (sharing-aware —
+        see pages_needed)."""
+        chain, pb = self._admit_chain(req)
+        need = min(pb + req.max_new, self.max_seq)
+        if chain is not None:
+            return (self.free_slots() > 0
+                    and self.backend.can_admit(need, chain=chain,
+                                               prompt_tokens=pb))
         return self.free_slots() > 0 and self.backend.can_admit(need)
 
     # -- engine internals ---------------------------------------------------
@@ -654,6 +702,20 @@ class ServingEngine:
             if prompt_len <= b:
                 return b
         return self.buckets[-1]      # longer prompts truncate to max bucket
+
+    @runs_on("worker")
+    def _remember_prefill(self, key: bytes, logits, sc_np) -> None:
+        """Cache a full-prompt prefill result (last-token logits + DRS
+        scores) under the prompt chain's final digest, LRU-bounded.  The
+        entry is only ever REPLAYED when every prompt page is still
+        resident, and it reproduces the prefill bitwise: identical
+        padded tokens through the same jitted prefill yield identical
+        logits, so the first sampled/greedy token — and with it the
+        whole stream — matches the recompute path exactly."""
+        self._prefill_cache[key] = (logits, sc_np)
+        self._prefill_cache.move_to_end(key)
+        while len(self._prefill_cache) > self._prefill_cache_cap:
+            self._prefill_cache.popitem(last=False)
 
     @runs_on("worker")
     def _admit(self):
@@ -696,25 +758,56 @@ class ServingEngine:
                         f"last {pb} tokens (warned once per engine)")
                     self._warned_truncation = True
             need = min(pb + req.max_new, self.max_seq)
-            if not self.backend.can_admit(need):
-                break            # retirements will free pages; retry later
-            self.queue.popleft()
             toks = np.zeros((1, pb), np.int32)
             pr = req.prompt[-pb:]
             toks[0, pb - len(pr):] = pr
-            if self.dsg_rt is not None:
+            # prefix sharing: the chain keys the BUCKETED row (padding
+            # included) — page bytes are a pure function of the padded
+            # prefix, so only identical padded prefixes may alias
+            chain = (kv_cache.prefix_chain(toks[0], self.page_size)
+                     if self.prefix_sharing else None)
+            admit_ok = (self.backend.can_admit(need, chain=chain,
+                                               prompt_tokens=pb)
+                        if chain is not None
+                        else self.backend.can_admit(need))
+            if not admit_ok:
+                break            # retirements will free pages; retry later
+            self.queue.popleft()
+            # zero-recompute path: every prompt page resident AND the
+            # full-prompt prefill outputs cached -> skip the prefill
+            # dispatch and the K/V scatter entirely.  Probe and write
+            # run back to back on this worker thread, so a hit cannot
+            # go stale in between.
+            cached = None
+            if chain is not None \
+                    and self.backend.shared_hits(chain) == len(chain):
+                cached = self._prefill_cache.get(chain[-1])
+            if cached is not None:
+                self._prefill_cache.move_to_end(chain[-1])
+                self.prefill_cache_hits += 1
+                logits, sc_np = cached
+                lane = None
+                if self.dsg_rt is not None:
+                    self.dsg_rt.set_lane_from_scores(i, sc_np[:, 0])
+            elif self.dsg_rt is not None:
                 logits, lane, sc = self._jit_prefill_dsg(
                     self.params, self.dsg, jnp.asarray(toks), self._lane0)
                 # seed the lane's CSR pattern from the prompt's last-token
                 # DRS scores: the lane decodes sparsely from step one (a
                 # dense warm-in would dilute the modeled FLOP reduction)
-                self.dsg_rt.set_lane_from_scores(i, np.asarray(sc)[:, 0])
+                sc_np = np.asarray(sc)
+                self.dsg_rt.set_lane_from_scores(i, sc_np[:, 0])
+                if chain is not None:
+                    self._remember_prefill(chain[-1], logits, sc_np)
             else:
                 logits, lane = self._jit_prefill(self.params, self.dsg,
                                                  jnp.asarray(toks),
                                                  self._lane0)
+                if chain is not None:
+                    self._remember_prefill(chain[-1], logits, None)
             self.cache = self.backend.write(self.cache, lane, i,
-                                            n_tokens=pb, reserve_tokens=need)
+                                            n_tokens=pb, reserve_tokens=need,
+                                            chain=chain)
             # _draws advances for every admission so the sampling key
             # schedule doesn't depend on how many greedy requests preceded
             self._draws += 1
@@ -900,7 +993,10 @@ class ServingEngine:
                                                        s.pos, s.pos + w)
         if C == 1:
             for i in active:
-                self.slots[i].req.output.append(int(tok[i]))
+                r = self.slots[i].req
+                if not r.output:
+                    r.first_token = time.perf_counter()   # TTFT stamp
+                r.output.append(int(tok[i]))
             return StepPlan(active=active, donor=donor, tok=tok, pos=pos,
                             free_mask=free_mask, temps=temps, top_ps=top_ps,
                             live_pages=self._live_pages(pos),
@@ -979,6 +1075,11 @@ class ServingEngine:
         for i in plan.active:
             slot = self.slots[i]
             n = int(flags[:, i].sum())
+            if n and not slot.req.output:
+                # TTFT stamp at host observation time: the token left the
+                # device mid-chunk, but commit is when a caller could
+                # first stream it — the honest latency for a fused loop
+                slot.req.first_token = time.perf_counter()
             slot.req.output.extend(int(t) for t in blk[:n, i])
             slot.pos += n
             emitted += n

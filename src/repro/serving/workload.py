@@ -5,6 +5,18 @@ long prompts (and short and long generations) interleave, so a wave-admission
 engine strands free lanes until the whole batch drains while overlap refills
 them immediately.  bench_serving.py and `launch/serve.py --workload mixed`
 both drive the engine through this module so the numbers agree.
+
+Open-loop evaluation (docs/serving.md): closed-loop drains measure the
+system at its own pace — every retirement immediately frees capacity for
+the next request, so queueing delay never appears.  Production traffic
+arrives on ITS schedule; `poisson_arrivals`/`trace_arrivals` +
+`run_open_loop` submit requests at wall-clock offsets regardless of
+engine state, and `latency_stats` splits the user-visible latency into
+TTFT (submit -> first token) and TPOT (steady-state inter-token) —
+the two numbers serving SLOs are written against.  SCENARIOS holds the
+mixed-tenant presets (chat / batch / long_context);
+`shared_prefix_requests` builds the overlapping-prefix traffic the
+copy-on-write paged backend dedupes (bench_prefix_sharing.py).
 """
 from __future__ import annotations
 
@@ -59,6 +71,164 @@ def skewed_requests(vocab: int, n_requests: int, *, period: int = 2,
                             max_new=int(rng.integers(nr[0], nr[1] + 1)),
                             eos_id=eos_id))
     return reqs
+
+
+#: Mixed-tenant scenario presets (docs/serving.md): the three canonical
+#: production traffic shapes.  Ranges are in tokens, sized for the smoke
+#: model's default engine limits (max_seq 384, prompt_bucket 256).
+SCENARIOS = {
+    "chat": dict(prompt_range=(8, 48), max_new_range=(16, 48)),
+    "batch": dict(prompt_range=(48, 128), max_new_range=(32, 64)),
+    "long_context": dict(prompt_range=(128, 256), max_new_range=(8, 24)),
+}
+
+
+def scenario_requests(scenario: str, vocab: int, n_requests: int, *,
+                      seed: int = 0, eos_id=None, temperature: float = 0.0,
+                      top_p: float = 1.0) -> List[Request]:
+    """Single-tenant traffic drawn from a SCENARIOS preset."""
+    try:
+        preset = SCENARIOS[scenario]
+    except KeyError:
+        raise ValueError(f"unknown scenario {scenario!r}; expected one of "
+                         f"{sorted(SCENARIOS)}") from None
+    return mixed_requests(vocab, n_requests, seed=seed, eos_id=eos_id,
+                          temperature=temperature, top_p=top_p, **preset)
+
+
+def mixed_tenant_requests(vocab: int, n_requests: int, *,
+                          scenarios=("chat", "batch", "long_context"),
+                          seed: int = 0, eos_id=None,
+                          temperature: float = 0.0,
+                          top_p: float = 1.0) -> List[Request]:
+    """Interleaved multi-tenant traffic: request uid i draws its shape
+    from scenarios[i % len(scenarios)], so every scheduling window sees
+    all tenants at once — the heterogeneity that makes open-loop TTFT
+    tails interesting (a long-context prefill ahead of a chat turn)."""
+    presets = []
+    for s in scenarios:
+        if s not in SCENARIOS:
+            raise ValueError(f"unknown scenario {s!r}; expected one of "
+                             f"{sorted(SCENARIOS)}")
+        presets.append(SCENARIOS[s])
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for uid in range(n_requests):
+        p = presets[uid % len(presets)]
+        plen = int(rng.integers(p["prompt_range"][0],
+                                p["prompt_range"][1] + 1))
+        max_new = int(rng.integers(p["max_new_range"][0],
+                                   p["max_new_range"][1] + 1))
+        reqs.append(Request(uid=uid,
+                            prompt=rng.integers(0, vocab, plen,
+                                                dtype=np.int32),
+                            max_new=max_new, eos_id=eos_id,
+                            temperature=temperature, top_p=top_p))
+    return reqs
+
+
+def shared_prefix_requests(vocab: int, n_requests: int, *,
+                           prompt_len: int = 24, prefix_len: int = 16,
+                           max_new: int = 8, seed: int = 0, eos_id=None,
+                           temperature: float = 0.0,
+                           top_p: float = 1.0) -> List[Request]:
+    """Overlapping-prefix traffic: every prompt is `prompt_len` tokens,
+    the first `prefix_len` identical (a shared system prompt), the tail
+    unique per request.  prompt_len is FIXED on purpose: the engine
+    right-aligns prompts into their bucket, so only identically padded
+    rows produce identical page bytes — equal-length prompts are the
+    shape on which prefix sharing (kv_cache.PagedBackend) can dedupe."""
+    if not 0 <= prefix_len <= prompt_len:
+        raise ValueError(f"need 0 <= prefix_len ({prefix_len}) <= "
+                         f"prompt_len ({prompt_len})")
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, prefix_len, dtype=np.int32)
+    reqs = []
+    for uid in range(n_requests):
+        suffix = rng.integers(0, vocab, prompt_len - prefix_len,
+                              dtype=np.int32)
+        reqs.append(Request(uid=uid,
+                            prompt=np.concatenate([prefix, suffix]),
+                            max_new=max_new, eos_id=eos_id,
+                            temperature=temperature, top_p=top_p))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# open-loop arrivals
+# ---------------------------------------------------------------------------
+
+def poisson_arrivals(n: int, rate_rps: float, *, seed: int = 0,
+                     start: float = 0.0) -> np.ndarray:
+    """Cumulative arrival offsets (seconds) of a Poisson process at
+    `rate_rps` requests/second — the standard open-loop arrival model
+    (memoryless gaps, bursts included)."""
+    if n < 0:
+        raise ValueError(f"n must be >= 0, got {n}")
+    if rate_rps <= 0:
+        raise ValueError(f"rate_rps must be positive, got {rate_rps}")
+    rng = np.random.default_rng(seed)
+    return start + np.cumsum(rng.exponential(1.0 / rate_rps, n))
+
+
+def trace_arrivals(inter_arrival_s, *, start: float = 0.0) -> np.ndarray:
+    """Cumulative arrival offsets from recorded inter-arrival gaps — the
+    replay-a-production-trace arrival model."""
+    gaps = np.asarray(inter_arrival_s, dtype=float)
+    if gaps.ndim != 1:
+        raise ValueError("inter_arrival_s must be a 1-D gap sequence")
+    if (gaps < 0).any():
+        raise ValueError("inter-arrival gaps must be non-negative")
+    return start + np.cumsum(gaps)
+
+
+def run_open_loop(runner, requests: List[Request], arrivals,
+                  *, max_steps: int = 200_000) -> Dict[int, Request]:
+    """Drive `runner` (a ServingEngine, or a Router on a lockstep
+    executor) open-loop: request i is submitted at wall-clock offset
+    arrivals[i] whether or not the system has capacity — queueing delay
+    lands in TTFT, exactly as a user would see it.  Between arrivals the
+    loop steps the runner if it has work, else sleeps until the next
+    arrival.  Returns the merged {uid: Request} results.
+
+    Free-running executors own their drive loop and cannot interleave
+    timed submissions with ticks, so they are rejected — open-loop
+    measurement needs the tick under this loop's control."""
+    arrivals = np.asarray(arrivals, dtype=float)
+    if len(arrivals) != len(requests):
+        raise ValueError(f"{len(requests)} requests but {len(arrivals)} "
+                         f"arrival offsets")
+    if len(arrivals) > 1 and (np.diff(arrivals) < 0).any():
+        raise ValueError("arrival offsets must be non-decreasing")
+    is_router = isinstance(runner, Router)
+    if is_router and not runner.executor.lockstep:
+        raise ValueError(
+            f"open-loop driving needs a lockstep runner; executor "
+            f"{runner.executor.name!r} free-runs its replicas")
+    if is_router:
+        busy = runner._busy
+    else:
+        busy = lambda: bool(runner.queue) or any(      # noqa: E731
+            not s.free for s in runner.slots)
+    t0 = time.perf_counter()
+    i, steps = 0, 0
+    while i < len(requests) or busy():
+        now = time.perf_counter() - t0
+        while i < len(requests) and arrivals[i] <= now:
+            runner.submit(requests[i])
+            i += 1
+        if busy():
+            runner.step()
+            steps += 1
+            if steps >= max_steps:
+                raise RuntimeError(
+                    f"open-loop run exceeded max_steps={max_steps} with "
+                    f"{i}/{len(requests)} submitted")
+        elif i < len(requests):
+            # idle: sleep toward the next arrival (capped so a long gap
+            # still polls, keeping the loop responsive to clock skew)
+            time.sleep(min(max(arrivals[i] - now, 0.0), 0.01))
+    return runner.done() if is_router else dict(runner.done)
 
 
 def warm_temp_for(requests, warm_temp: float = 0.0) -> float:
@@ -124,10 +294,18 @@ def warmup_router(router: Router, vocab: int, warm_temp: float = 0.0,
 
 def latency_stats(done: Dict[int, Request]) -> Dict[str, float]:
     """p50/p95 end-to-end latency (submit -> finish) over requests that
-    finished OK.  Failed/timed-out requests are counted separately, NOT
-    folded into the percentiles: a timed-out request's finish stamp is
-    exactly its deadline, so including it reports the SLO ceiling as an
-    observed latency and quietly flattens p95 toward the deadline.
+    finished OK, split into the two SLO components: TTFT (submit ->
+    first emitted token, the queueing + prefill wait a user stares at)
+    and TPOT (steady-state seconds per token after the first — the
+    streaming rate).  Failed/timed-out requests are counted separately,
+    NOT folded into the percentiles: a timed-out request's finish stamp
+    is exactly its deadline, so including it reports the SLO ceiling as
+    an observed latency and quietly flattens p95 toward the deadline.
+
+    TTFT needs the engine's `first_token` stamp (requests recorded
+    before PR 10 carry 0.0) and TPOT additionally needs >= 2 output
+    tokens; when no ok request qualifies the respective keys are
+    OMITTED rather than reported as an impossible 0.0.
 
     Raises ValueError when no request finished ok: a silent 0.0
     percentile reads as an impossibly fast pipeline in dashboards —
@@ -144,13 +322,25 @@ def latency_stats(done: Dict[int, Request]) -> Dict[str, float]:
             "completion latency of a request that never completed is "
             "not a percentile")
     lat = np.array(sorted(r.finished - r.submitted for r in ok))
-    return {"p50_s": float(np.percentile(lat, 50)),
-            "p95_s": float(np.percentile(lat, 95)),
-            "ok_requests": len(ok),
-            "failed_requests": sum(r.status == "failed"
-                                   for r in done.values()),
-            "timed_out_requests": sum(r.status == "timed_out"
-                                      for r in done.values())}
+    stats = {"p50_s": float(np.percentile(lat, 50)),
+             "p95_s": float(np.percentile(lat, 95)),
+             "ok_requests": len(ok),
+             "failed_requests": sum(r.status == "failed"
+                                    for r in done.values()),
+             "timed_out_requests": sum(r.status == "timed_out"
+                                       for r in done.values())}
+    ttft = np.array(sorted(r.first_token - r.submitted for r in ok
+                           if r.first_token > 0.0))
+    if len(ttft):
+        stats["ttft_p50_s"] = float(np.percentile(ttft, 50))
+        stats["ttft_p95_s"] = float(np.percentile(ttft, 95))
+    tpot = np.array(sorted((r.finished - r.first_token)
+                           / (len(r.output) - 1) for r in ok
+                           if r.first_token > 0.0 and len(r.output) > 1))
+    if len(tpot):
+        stats["tpot_p50_s"] = float(np.percentile(tpot, 50))
+        stats["tpot_p95_s"] = float(np.percentile(tpot, 95))
+    return stats
 
 
 def run_workload(cfg, params, dsg, requests: List[Request], *,
@@ -161,7 +351,7 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
                  route_policy: str = "least_queue",
                  exec_mode: str = "sequential", dsg_serving=None,
                  fault_tolerance=None, faults=None,
-                 decode_chunk: int = 1,
+                 decode_chunk: int = 1, prefix_sharing: bool = False,
                  max_steps: int = 100_000) -> Dict[str, float]:
     """Run the request list through one engine (replicas=1, the historical
     path) or a Router over `replicas` engines; returns throughput/latency
@@ -192,7 +382,8 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
                      prompt_bucket=prompt_bucket, admission=admission,
                      cache_backend=cache_backend, page_size=page_size,
                      cache_tokens=cache_tokens, dsg_serving=dsg_serving,
-                     decode_chunk=decode_chunk)
+                     decode_chunk=decode_chunk,
+                     prefix_sharing=prefix_sharing)
     if faults is not None and fault_tolerance is None:
         fault_tolerance = True
     if (replicas == 1 and exec_mode == "sequential"
@@ -233,6 +424,7 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
         "cache_backend": cache_backend,
         "replicas": replicas,
         "decode_chunk": decode_chunk,
+        "prefix_sharing": prefix_sharing,
         "requests": len(done),
         "tokens": toks,
         "truncated": sum(r.truncated for r in done.values()),
@@ -253,6 +445,13 @@ def run_workload(cfg, params, dsg, requests: List[Request], *,
                                 if stepper.decode_tokens else 0.0,
             "steps": stepper.steps,
         })
+        if prefix_sharing:
+            stats.update({
+                "prefill_cache_hits": stepper.prefill_cache_hits,
+                "shared_page_hits": stepper.backend.shared_page_hits,
+                "cow_copies": stepper.backend.cow_copies,
+                "peak_live_pages": stepper.backend.allocator.peak_live,
+            })
     else:
         stats.update({
             "route_policy": runner.policy.name,

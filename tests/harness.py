@@ -34,6 +34,13 @@ from repro.serving.scheduler import Request, ServingEngine
 
 SMOKE_ARCH = "internlm2-1.8b"
 
+# The decode_chunk axis every differential suite pins: 1 is the
+# classic one-token-per-step loop, 8 is the fused device-resident
+# chunk (PR 9).  Parametrizing over this pair catches chunk-boundary
+# bugs (commit_chunk early-exit, EOS mid-chunk) in every suite that
+# adopts it without bespoke engine setup.
+CHUNK_AXIS = (1, 8)
+
 
 def smoke_cfg(arch: str = SMOKE_ARCH, threshold_mode: str = None):
     """The smoke-model config the serving tests share; threshold_mode
@@ -85,14 +92,37 @@ def mixed_traffic(cfg, *, seed=23, n=6, temperature: float = 0.0,
             for u in range(n)]
 
 
+def shared_prefix_traffic(cfg, *, seed=29, n=6, prompt_len=24,
+                          prefix_len=16, max_new=6,
+                          temperature: float = 0.0, top_p: float = 1.0):
+    """n requests sharing one random prefix with per-request random
+    suffixes — the canonical traffic for prefix-sharing differentials.
+    Prompt lengths are FIXED (not mixed): the paged backend only shares
+    pages between identical padded rows, so every request must land in
+    the same prompt bucket with the prefix at the same offset."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab, prefix_len, dtype=np.int32)
+    reqs = []
+    for u in range(n):
+        suffix = rng.integers(0, cfg.vocab, prompt_len - prefix_len,
+                              dtype=np.int32)
+        reqs.append(Request(uid=u,
+                            prompt=np.concatenate([prefix, suffix]),
+                            max_new=max_new, temperature=temperature,
+                            top_p=top_p))
+    return reqs
+
+
 def run_and_collect(spec: dict, requests, *, max_steps: int = 400,
-                    return_engine: bool = False):
+                    return_engine: bool = False, faults=None):
     """Run `requests` through the engine (or router) the spec describes
     and return `{rid: tokens}` — every submitted request must finish
     within max_steps.  Set `n_replicas` (and optionally `policy`) in the
     spec to run a Router; otherwise a bare ServingEngine.  With
     return_engine=True, returns (streams, engine_or_router) for
-    allocator / counter assertions."""
+    allocator / counter assertions.  `faults` takes a list of
+    ReplicaFault specs to attach via ServingFaultInjector before the
+    run (chaos cases; pair with a `fault_tolerance` spec entry)."""
     kw = dict(spec)
     cfg, params, dsg = kw.pop("cfg"), kw.pop("params"), kw.pop("dsg")
     n_replicas = kw.pop("n_replicas", None)
@@ -102,12 +132,23 @@ def run_and_collect(spec: dict, requests, *, max_steps: int = 400,
     else:
         eng = Router(cfg, params, dsg, n_replicas=n_replicas,
                      policy=policy, **kw)
+    if faults:
+        from repro.runtime.fault_tolerance import ServingFaultInjector
+        inj = ServingFaultInjector(list(faults))
+        inj.attach(eng.engines if n_replicas is not None else [eng])
     for r in requests:
         eng.submit(r)
-    done = eng.run(max_steps=max_steps)
+    try:
+        done = eng.run(max_steps=max_steps)
+    finally:
+        if n_replicas is not None and not return_engine:
+            eng.close()
     assert len(done) == len(requests), (
         f"only {len(done)} of {len(requests)} requests finished "
         f"within {max_steps} steps")
+    assert all(r.status == "ok" for r in done.values()), (
+        "non-ok request in " +
+        str({u: r.status for u, r in done.items() if r.status != "ok"}))
     streams = {u: list(r.output) for u, r in done.items()}
     return (streams, eng) if return_engine else streams
 

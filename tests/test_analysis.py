@@ -536,3 +536,82 @@ def test_latency_stats_excludes_non_ok():
     bad = {u: r for u, r in done.items() if r.status != "ok"}
     with pytest.raises(ValueError, match="status"):
         latency_stats(bad)
+
+
+def _stamped_request(uid, *, submitted=10.0, first=None, finished=None,
+                     n_out=0, status="ok"):
+    from repro.serving.scheduler import Request
+    import numpy as np
+    r = Request(uid=uid, prompt=np.zeros(4, np.int32))
+    r.submitted = submitted
+    r.first_token = 0.0 if first is None else first
+    r.finished = finished if finished is not None else submitted + 1.0
+    r.output = list(range(n_out))
+    r.status = status
+    return r
+
+
+def test_latency_stats_ttft_tpot_split():
+    """TTFT = submit -> first token; TPOT = (finish - first token) /
+    (output tokens - 1).  Four ok requests with hand-picked stamps pin
+    both percentile pairs."""
+    from repro.serving.workload import latency_stats
+    done = {}
+    # ttft values: 0.1, 0.2, 0.3, 0.4; each emits 5 tokens over the 4
+    # post-first-token gaps -> tpot 0.1, 0.2, 0.3, 0.4 as well
+    for uid, ttft in enumerate([0.1, 0.2, 0.3, 0.4]):
+        done[uid] = _stamped_request(
+            uid, submitted=10.0, first=10.0 + ttft,
+            finished=10.0 + ttft + 4 * ttft, n_out=5)
+    stats = latency_stats(done)
+    assert stats["ttft_p50_s"] == pytest.approx(0.25)
+    assert stats["ttft_p95_s"] == pytest.approx(0.385)
+    assert stats["tpot_p50_s"] == pytest.approx(0.25)
+    assert stats["tpot_p95_s"] == pytest.approx(0.385)
+    # the end-to-end percentiles still cover submit -> finish
+    assert stats["p50_s"] == pytest.approx(1.25)
+
+
+def test_latency_stats_ttft_tpot_exclude_non_ok():
+    """Failed/timed-out requests must not leak into the TTFT/TPOT
+    percentiles (same exclusion contract as p50/p95), and the ValueError
+    semantics are unchanged for empty / all-non-ok inputs."""
+    from repro.serving.workload import latency_stats
+    done = {}
+    for uid, ttft in enumerate([0.1, 0.2, 0.3, 0.4]):
+        done[uid] = _stamped_request(
+            uid, submitted=10.0, first=10.0 + ttft,
+            finished=10.0 + ttft + 4 * ttft, n_out=5)
+    done[90] = _stamped_request(90, first=40.0, finished=50.0, n_out=5,
+                                status="timed_out")
+    done[91] = _stamped_request(91, first=30.0, finished=60.0, n_out=5,
+                                status="failed")
+    stats = latency_stats(done)
+    assert stats["ttft_p50_s"] == pytest.approx(0.25)   # unmoved
+    assert stats["tpot_p95_s"] == pytest.approx(0.385)  # unmoved
+    assert stats["failed_requests"] == 1
+    assert stats["timed_out_requests"] == 1
+    with pytest.raises(ValueError, match="finished request"):
+        latency_stats({})
+    bad = {u: r for u, r in done.items() if r.status != "ok"}
+    with pytest.raises(ValueError, match="status"):
+        latency_stats(bad)
+
+
+def test_latency_stats_omits_unavailable_splits():
+    """No silent 0.0: requests without a first_token stamp (recorded
+    before the stamp existed) contribute no TTFT sample, and 0/1-token
+    outputs contribute no TPOT sample — when NO ok request qualifies the
+    keys are omitted entirely."""
+    from repro.serving.workload import latency_stats
+    # no stamps at all -> neither split reported
+    done = {0: _stamped_request(0, n_out=3), 1: _stamped_request(1, n_out=3)}
+    stats = latency_stats(done)
+    assert "ttft_p50_s" not in stats and "tpot_p50_s" not in stats
+    assert stats["ok_requests"] == 2
+    # stamped but single-token: TTFT reported, TPOT undefined (no
+    # inter-token gap exists)
+    done = {0: _stamped_request(0, first=10.25, finished=10.25, n_out=1)}
+    stats = latency_stats(done)
+    assert stats["ttft_p50_s"] == pytest.approx(0.25)
+    assert "tpot_p50_s" not in stats and "tpot_p95_s" not in stats

@@ -20,8 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from harness import (assert_streams_equal, engine_spec, make_engine_parts,
-                     mixed_traffic, run_and_collect)
+from harness import (CHUNK_AXIS, assert_streams_equal, engine_spec,
+                     make_engine_parts, mixed_traffic, run_and_collect)
 from repro.core import double_mask as dm
 from repro.core import dsg_linear as dl
 from repro.core import sparse_mask
@@ -410,3 +410,19 @@ def test_engine_validation_raises(engine_parts):
     with pytest.raises(ValueError, match="relu_sum"):
         ServingEngine(cfg.replace(dsg=cfg.dsg._replace(score="abs_sum")),
                       params, dsg, dsg_serving=True, **kw)
+
+
+@pytest.mark.parametrize("chunk", CHUNK_AXIS)
+def test_dsg_streams_invariant_to_decode_chunk(engine_parts, chunk):
+    """DSG-gated decode under the fused chunk loop: DRS refresh must
+    land on chunk boundaries (refresh_interval 8 divides both chunk
+    sizes), and streams must match the unchunked DSG engine
+    bit-for-bit."""
+    cfg = engine_parts[0]
+    kw = dict(dsg_serving=DSGServingConfig(refresh_interval=8))
+    ref = run_and_collect(engine_spec(*engine_parts, **kw),
+                          mixed_traffic(cfg))
+    out = run_and_collect(
+        engine_spec(*engine_parts, decode_chunk=chunk, **kw),
+        mixed_traffic(cfg), max_steps=1000)
+    assert_streams_equal(ref, out, f"dsg decode_chunk={chunk}")

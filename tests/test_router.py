@@ -12,8 +12,8 @@ count (so per-replica admission deferral never triggers)."""
 import numpy as np
 import pytest
 
-from harness import (assert_streams_equal, engine_spec, make_engine_parts,
-                     mixed_traffic, run_and_collect)
+from harness import (CHUNK_AXIS, assert_streams_equal, engine_spec,
+                     make_engine_parts, mixed_traffic, run_and_collect)
 from repro.serving.kv_cache import DenseBackend
 from repro.serving.router import Router, get_policy
 from repro.serving.scheduler import Request, ServingEngine
@@ -176,3 +176,21 @@ def test_least_pages_never_admits_beyond_reservation(engine_parts):
     # with single-reservation pools, deferral must actually have happened
     # at the router (6 requests, 2 one-lane-at-a-time replicas)
     assert router.steps > len(router.replicas)
+
+
+# ---------------------------------------------------------------------------
+# decode_chunk axis (harness.CHUNK_AXIS)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", CHUNK_AXIS)
+def test_routed_streams_invariant_to_decode_chunk(engine_parts, chunk):
+    """The fused decode chunk is a pure batching change: a 2-replica
+    router running chunked engines merges the same greedy streams as
+    the unchunked bare-engine reference."""
+    cfg = engine_parts[0]
+    ref = run_and_collect(engine_spec(*engine_parts), mixed_traffic(cfg))
+    out = run_and_collect(
+        engine_spec(*engine_parts, decode_chunk=chunk, n_replicas=2,
+                    policy="round_robin"),
+        mixed_traffic(cfg), max_steps=1000)
+    assert_streams_equal(ref, out, f"router decode_chunk={chunk}")

@@ -11,8 +11,8 @@ streams bitwise against an undisturbed single-engine reference.
 import numpy as np
 import pytest
 
-from harness import (assert_streams_equal, engine_spec, make_engine_parts,
-                     mixed_traffic, run_and_collect)
+from harness import (CHUNK_AXIS, assert_streams_equal, engine_spec,
+                     make_engine_parts, mixed_traffic, run_and_collect)
 from repro.runtime.fault_tolerance import (InjectedFault, ReplicaFault,
                                            ServingFaultInjector)
 from repro.serving.router import (FaultToleranceConfig, Router,
@@ -380,3 +380,19 @@ def test_run_workload_chaos_stats(parts):
     assert stats["failed"] == 0 and stats["timed_out"] == 0
     assert stats["retries"] > 0
     assert stats["replica_health"] == ["healthy", "healthy"]
+
+
+@pytest.mark.parametrize("chunk", CHUNK_AXIS)
+def test_kill_failover_invariant_to_decode_chunk(parts, ref_streams, chunk):
+    """Chaos kill under the fused chunk loop (harness faults= path):
+    the victim's requests replay on survivors and the merged streams
+    match the healthy unchunked reference for every chunk size."""
+    cfg = parts[0]
+    streams = run_and_collect(
+        engine_spec(*parts, decode_chunk=chunk, n_replicas=3,
+                    policy="round_robin",
+                    fault_tolerance=FaultToleranceConfig(
+                        max_replica_restarts=0, max_retries=3)),
+        mixed_traffic(cfg), max_steps=8000,
+        faults=[ReplicaFault(replica=1, step=3)])
+    assert_streams_equal(ref_streams, streams, f"chaos decode_chunk={chunk}")

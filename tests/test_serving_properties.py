@@ -68,6 +68,85 @@ def test_allocator_rejects_double_free_and_foreign(alloc_pages, k):
 
 
 # ---------------------------------------------------------------------------
+# BlockAllocator: share / register / free interleavings (prefix sharing)
+# ---------------------------------------------------------------------------
+
+# ops: 0=alloc+register, 1=share a random indexed page, 2=free one of our
+# refs, 3=free ALL refs on a random held page (retire-style release)
+_SHARE_OPS = st.lists(st.tuples(st.integers(0, 3), st.integers(0, 9)),
+                      max_size=60)
+
+
+@settings(max_examples=200)
+@given(st.integers(2, 16), _SHARE_OPS)
+def test_share_cow_free_interleavings_conserve(alloc_pages, ops):
+    """Random share/free interleavings over an indexed allocator: a page
+    is free-listed exactly when its refcount hits zero (never while a
+    holder remains), total pages are conserved (free + live ==
+    allocatable), the index never points at a freed page, and releasing
+    a ref twice past zero raises instead of double-freeing."""
+    a = BlockAllocator(alloc_pages + 1, reserved=1)
+    refs = {}                                 # page -> refs WE hold
+    key_of = {}                               # page -> registered key
+    n_keys = 0
+    for op, pick in ops:
+        if op == 0 and a.free_pages:
+            (p,) = a.alloc(1)
+            assert p not in refs              # free list never lies
+            refs[p] = 1
+            k = b"key%d" % n_keys
+            n_keys += 1
+            a.register(k, p)
+            key_of[p] = k
+        elif op == 1 and refs:
+            p = sorted(refs)[pick % len(refs)]
+            rc = a.share(p)
+            refs[p] += 1
+            assert rc == refs[p] == a.refcount(p)
+        elif op == 2 and refs:
+            p = sorted(refs)[pick % len(refs)]
+            refs[p] -= 1
+            a.free([p])
+            if refs[p] == 0:
+                del refs[p]
+                assert a.refcount(p) == 0
+                assert a.lookup(key_of.pop(p)) is None   # index died with it
+                with pytest.raises(ValueError):          # release past zero
+                    a.free([p])
+                with pytest.raises(ValueError):          # can't share a corpse
+                    a.share(p)
+        elif op == 3 and refs:
+            p = sorted(refs)[pick % len(refs)]
+            a.free([p] * refs.pop(p))
+            assert a.refcount(p) == 0
+            assert a.lookup(key_of.pop(p)) is None
+        # invariants, every step:
+        assert a.free_pages + len(refs) == alloc_pages   # conservation
+        assert a.live_pages == len(refs)
+        for p, k in key_of.items():
+            assert a.lookup(k) == p                      # index is live-only
+        assert a.index_size == len(key_of)
+
+
+@settings(max_examples=150)
+@given(st.integers(1, 8), st.integers(1, 5))
+def test_register_is_first_writer_wins_and_live_only(alloc_pages, extra):
+    """register() refuses freed pages, keeps the first binding on key
+    collision, and lookup of a never-registered key is None."""
+    a = BlockAllocator(alloc_pages + 1, reserved=1)
+    pages = a.alloc(alloc_pages)
+    a.register(b"k", pages[0])
+    for p in pages[:extra]:
+        a.register(b"k", p)                   # later bindings ignored
+    assert a.lookup(b"k") == pages[0]
+    assert a.lookup(b"nope") is None
+    a.free(pages)
+    with pytest.raises(ValueError):
+        a.register(b"k2", pages[0])
+    assert a.index_size == 0
+
+
+# ---------------------------------------------------------------------------
 # live_page_bound / live_page_buckets
 # ---------------------------------------------------------------------------
 
